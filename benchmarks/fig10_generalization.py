@@ -1,0 +1,48 @@
+"""Fig. 10: ReBranch generalization — transfer accuracy vs the all-SRAM
+full-fine-tune baseline, plus the area saving.
+
+Paper claims: <0.4% accuracy loss in classification with ~10x memory-area
+saving.  Here: synthetic task-A -> task-B transfer on the (reduced) VGG-8;
+the tested claim is the ReBranch-vs-full-fine-tune accuracy GAP and the
+frozen-trunk floor it recovers from, plus the area ratio from the cost
+model on the real VGG-8/ResNet-18 stats.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks import netstats, transfer_harness as th
+from repro.core import energy
+
+
+def run() -> list[str]:
+    lines = []
+    t0 = time.time()
+    _, acc_a = th.pretrained_dense()
+    acc_full, _ = th.run_transfer("full")
+    acc_rb, frac_rb = th.run_transfer("rebranch")
+    acc_frozen, _ = th.run_transfer("frozen")
+    us = (time.time() - t0) * 1e6
+
+    gap = acc_full - acc_rb
+    recovered = (acc_rb - acc_frozen) / max(acc_full - acc_frozen, 1e-9)
+    lines.append(f"fig10_pretrain_acc_taskA,{us:.0f},{acc_a:.4f}")
+    lines.append(f"fig10_full_finetune_acc,{us:.0f},{acc_full:.4f}")
+    lines.append(f"fig10_rebranch_acc,{us:.0f},{acc_rb:.4f}")
+    lines.append(f"fig10_frozen_trunk_acc,{us:.0f},{acc_frozen:.4f}")
+    lines.append(f"fig10_acc_gap_vs_full,{us:.0f},{gap:.4f} "
+                 f"(paper <0.004 at full scale)")
+    lines.append(f"fig10_gap_recovered_frac,{us:.0f},{recovered:.3f}")
+    lines.append(f"fig10_trainable_frac,{us:.0f},{frac_rb:.4f}")
+
+    for name in ("vgg8", "resnet18"):
+        ns = netstats.paper_net_stats()[name]
+        ratio = energy.area_ratio(ns)
+        lines.append(f"fig10_area_saving_{name},{us:.0f},{ratio:.2f}x "
+                     f"(paper ~10x)")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

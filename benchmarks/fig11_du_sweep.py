@@ -1,0 +1,31 @@
+"""Fig. 11: ReBranch hyperparameter sweep — compression ratio D*U vs
+transfer accuracy and area saving.  Paper: D=U=4 (16x) is the sweet spot."""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks import transfer_harness as th
+
+
+def run() -> list[str]:
+    lines = []
+    accs = {}
+    for d, u in [(2, 2), (4, 4), (8, 8)]:
+        t0 = time.time()
+        acc, frac = th.run_transfer("rebranch", d_ratio=d, u_ratio=u)
+        us = (time.time() - t0) * 1e6
+        accs[d * u] = acc
+        lines.append(f"fig11_DU{d}x{u}_acc,{us:.0f},{acc:.4f} "
+                     f"(compression {d*u}x, trainable {frac:.4f})")
+    # the paper's point: 16x compresses well without falling off the cliff
+    drop_16 = accs[4] - accs[16]
+    drop_64 = accs[4] - accs[64]
+    lines.append(f"fig11_acc_drop_4to16x,0,{drop_16:.4f}")
+    lines.append(f"fig11_acc_drop_4to64x,0,{drop_64:.4f} "
+                 f"(should exceed the 16x drop)")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,56 @@
+"""Fig. 14: system-level energy-efficiency comparison.
+
+Paper claims (vs the SRAM-CiM baseline of Fig. 13): 4.8x (ResNet-18),
+10.2x (Tiny-YOLO), 14.8x (YOLO / DarkNet-19); ~2% better than the chiplet
+configuration with ~10x less total chip area; ReBranch latency overhead
+~8% on YOLO."""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks import netstats
+from repro.core import energy
+
+
+PAPER = {"resnet18": 4.8, "tiny_yolo": 10.2, "darknet19": 14.8}
+
+
+def run() -> list[str]:
+    lines = []
+    t0 = time.time()
+    stats = netstats.paper_net_stats()
+    us = (time.time() - t0) * 1e6
+    for name, paper_x in PAPER.items():
+        ns = stats[name]
+        ours = energy.efficiency_ratio(ns)
+        e_y = energy.yoloc_energy(ns)
+        e_s = energy.sram_single_energy(ns)
+        lines.append(f"fig14_energy_ratio_{name},{us:.0f},{ours:.2f}x "
+                     f"(paper {paper_x}x)")
+        lines.append(
+            f"fig14_breakdown_{name},{us:.0f},"
+            f"yoloc[mac={e_y['mac']*1e3:.2f} cache={e_y['cache']*1e3:.2f}]uJ"
+            f" sram[mac={e_s['mac']*1e3:.2f} dram={e_s['dram']*1e3:.2f}"
+            f" cache={e_s['cache']*1e3:.2f}]uJ")
+    # chiplet comparison (YOLO): YOLoC should be slightly better on energy
+    # with ~10x area saving
+    ns = stats["darknet19"]
+    e_y = energy.yoloc_energy(ns)["total"]
+    e_c = energy.chiplet_energy(ns)["total"]
+    lines.append(f"fig14_vs_chiplet_energy,{us:.0f},{e_c/e_y:.3f}x "
+                 f"(paper ~1.02x)")
+    n_chips = energy.chiplet_energy(ns)["n_chips"]
+    chiplet_area = n_chips * (energy.DEFAULT_COST.chiplet_bits / 1e6
+                              / energy.DEFAULT_COST.sram_density_mb_mm2)
+    lines.append(f"fig14_vs_chiplet_area,{us:.0f},"
+                 f"{chiplet_area/energy.yoloc_area(ns):.1f}x "
+                 f"(paper ~10x)")
+    lat = energy.yoloc_latency(ns)
+    lines.append(f"fig14_latency_overhead_yolo,{us:.0f},"
+                 f"{lat['overhead_frac']:.3f} (paper 0.08)")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,53 @@
+"""NetStats for the paper's models, computed from the actual JAX models."""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+
+from repro.core.energy import NetStats
+from repro.models import cnn
+from repro.configs.paper_models import PAPER_MODELS
+
+
+def _act_bits(init_fn, apply_fn, cfg, act_bits=8) -> int:
+    """Inter-layer activation bits from the jaxpr (conv/dot outputs)."""
+    key = jax.random.PRNGKey(0)
+    params = jax.eval_shape(lambda k: init_fn(k, cfg), key)
+    x = jax.ShapeDtypeStruct((1, cfg.input_size, cfg.input_size, 3),
+                             np.float32)
+    jaxpr = jax.make_jaxpr(lambda p, xx: apply_fn(p, xx, cfg))(params, x)
+    total = 0
+    def walk(jpr):
+        nonlocal total
+        for eqn in jpr.eqns:
+            if eqn.primitive.name in ("conv_general_dilated", "dot_general"):
+                total += int(np.prod(eqn.outvars[0].aval.shape))
+            for sub in eqn.params.values():
+                if hasattr(sub, "jaxpr"):
+                    walk(sub.jaxpr)
+    walk(jaxpr.jaxpr)
+    return total * act_bits
+
+
+@functools.lru_cache(maxsize=None)
+def paper_net_stats() -> dict[str, NetStats]:
+    out = {}
+    schedule = {
+        # name: (reload_factor, act_spill, baseline)   — see NetStats doc
+        "vgg8": (1.0, False, "all_sram"),
+        "resnet18": (1.0, False, "all_sram"),
+        "tiny_yolo": (1.0, False, "iso_area"),
+        "darknet19": (3.0, True, "iso_area"),
+    }
+    for name, cfg in PAPER_MODELS.items():
+        init_fn, apply_fn = cnn.MODEL_REGISTRY[name]
+        n_params, macs = cnn.count_macs_and_params(init_fn, apply_fn, cfg)
+        rf, spill, base = schedule[name]
+        out[name] = NetStats(
+            name=name, params=n_params, macs=macs,
+            act_bits_moved=_act_bits(init_fn, apply_fn, cfg),
+            reload_factor=rf, act_spill=spill, baseline=base)
+    return out

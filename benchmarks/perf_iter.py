@@ -1,0 +1,124 @@
+"""§Perf hillclimb driver: lower ONE cell with config/sharding overrides
+and report the three roofline terms + memory, fast enough to iterate.
+
+  PYTHONPATH=src python -m benchmarks.perf_iter --arch yi_34b \
+      --shape train_4k [--trunk dequant|int8_native] [--loss-chunks 8]
+      [--attn-chunk 1024] [--moe-group 1024] [--capacity 1.25]
+      [--no-remat] [--tag note]
+
+Prints one CSV row:  tag,arch,shape,flops,hbm,coll,tc,tm,tcoll,dom,peakGiB
+"""
+
+from __future__ import annotations
+
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse
+import dataclasses
+import sys
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def run_cell(arch: str, shape: str, *, trunk=None, loss_chunks=8,
+             attn_chunk=None, moe_group=None, capacity=None, remat=None,
+             multi_pod=False, rules=None, tag="iter"):
+    import jax
+    from repro import configs, optim
+    from repro.core import rebranch
+    from repro.distributed import sharding as shd
+    from repro.launch import steps as steps_lib, hlo_cost
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = configs.get(arch)
+    over = {}
+    if trunk:
+        over["rebranch"] = dataclasses.replace(cfg.rebranch,
+                                               trunk_impl=trunk)
+    if attn_chunk:
+        over["attn_chunk"] = attn_chunk
+    if moe_group:
+        over["moe_group_size"] = moe_group
+    if capacity:
+        over["moe_capacity_factor"] = capacity
+    if remat is not None:
+        over["remat"] = remat
+    if over:
+        cfg = dataclasses.replace(cfg, **over)
+
+    seq, gbatch, kind = dict(
+        (s, (q, b, k)) for s, q, b, k in configs.cells(arch))[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    with shd.use_mesh(mesh, rules=rules), mesh:
+        t_sh, f_sh, opt_sh, param_shapes = steps_lib.model_state_shardings(
+            cfg, mesh)
+        in_specs = steps_lib.input_specs(cfg, seq, gbatch, kind)
+        in_sh = steps_lib.batch_shardings(cfg, mesh, in_specs, gbatch)
+        t_shapes, f_shapes = rebranch.partition(param_shapes)
+        if kind == "train":
+            step = steps_lib.make_train_step(cfg, loss_chunks=loss_chunks)
+            opt_shapes = jax.eval_shape(optim.init, t_shapes)
+            jitted = jax.jit(step, in_shardings=(t_sh, f_sh, opt_sh, in_sh),
+                             donate_argnums=(0, 2))
+            lowered = jitted.lower(t_shapes, f_shapes, opt_shapes, in_specs)
+        elif kind == "prefill":
+            step = steps_lib.make_prefill_step(cfg, gbatch, seq)
+            jitted = jax.jit(step, in_shardings=(
+                rebranch.combine(t_sh, f_sh), in_sh))
+            lowered = jitted.lower(param_shapes, in_specs)
+        else:
+            step = steps_lib.make_serve_step(cfg)
+            c_shapes = steps_lib.cache_specs(cfg, gbatch, seq)
+            c_sh = steps_lib.cache_shardings(cfg, mesh, c_shapes)
+            jitted = jax.jit(step, in_shardings=(
+                rebranch.combine(t_sh, f_sh), in_sh, c_sh),
+                donate_argnums=(2,))
+            lowered = jitted.lower(param_shapes, in_specs, c_shapes)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        costs = hlo_cost.analyse_text(compiled.as_text())
+
+    tc = costs["flops"] / PEAK_FLOPS
+    tm = costs["hbm_bytes"] / HBM_BW
+    tcoll = costs["collective_bytes"] / ICI_BW
+    dom = max(("compute", tc), ("memory", tm), ("collective", tcoll),
+              key=lambda kv: kv[1])[0]
+    peak = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes) / 2 ** 30
+    row = (f"{tag},{arch},{shape},{costs['flops']:.4g},"
+           f"{costs['hbm_bytes']:.4g},{costs['collective_bytes']:.4g},"
+           f"{tc*1e3:.3f}ms,{tm*1e3:.3f}ms,{tcoll*1e3:.3f}ms,{dom},"
+           f"{peak:.1f}GiB")
+    print(row, flush=True)
+    return {"flops": costs["flops"], "hbm": costs["hbm_bytes"],
+            "coll": costs["collective_bytes"], "tc": tc, "tm": tm,
+            "tcoll": tcoll, "dom": dom, "peak_gib": peak,
+            "collectives": costs["collectives"]}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--trunk", default=None)
+    ap.add_argument("--loss-chunks", type=int, default=8)
+    ap.add_argument("--attn-chunk", type=int, default=None)
+    ap.add_argument("--moe-group", type=int, default=None)
+    ap.add_argument("--capacity", type=float, default=None)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--tag", default="iter")
+    a = ap.parse_args()
+    run_cell(a.arch, a.shape, trunk=a.trunk, loss_chunks=a.loss_chunks,
+             attn_chunk=a.attn_chunk, moe_group=a.moe_group,
+             capacity=a.capacity, remat=False if a.no_remat else None,
+             multi_pod=a.multi_pod, tag=a.tag)
+
+
+if __name__ == "__main__":
+    main()

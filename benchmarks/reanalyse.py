@@ -1,0 +1,63 @@
+"""Re-derive per-cell costs from saved partitioned HLO (hlo/*.hlo.gz)
+without recompiling: merges hlo_cost numbers into dryrun_results.json
+records (memory fields come from the original compile).
+
+  PYTHONPATH=src python -m benchmarks.reanalyse \
+      --hlo-dir hlo --base dryrun_results.json --out dryrun_results.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import gzip
+import json
+import os
+
+from repro.launch import hlo_cost
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hlo-dir", default="hlo")
+    ap.add_argument("--base", default="dryrun_results.json")
+    ap.add_argument("--out", default="dryrun_results.json")
+    args = ap.parse_args()
+
+    with open(args.base) as f:
+        records = json.load(f)
+    by_key = {}
+    for r in records:
+        by_key[(r["arch"], r["shape"], r["mesh"])] = r
+
+    n = 0
+    for path in sorted(glob.glob(os.path.join(args.hlo_dir, "*.hlo.gz"))):
+        stem = os.path.basename(path)[:-7]
+        parts = stem.rsplit("_", 2)
+        # <arch>_<shape>_<mesh>: shape contains one '_', mesh has 'x'
+        arch_shape, mesh = stem.rsplit("_", 1)
+        arch, shape = None, None
+        for cand in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+            if arch_shape.endswith("_" + cand):
+                arch = arch_shape[: -len(cand) - 1]
+                shape = cand
+                break
+        if arch is None:
+            continue
+        key = (arch, shape, mesh)
+        rec = by_key.get(key)
+        if rec is None:
+            continue
+        with gzip.open(path, "rt") as f:
+            costs = hlo_cost.analyse_text(f.read())
+        rec.update(flops=costs["flops"], hbm_bytes=costs["hbm_bytes"],
+                   collective_bytes=costs["collective_bytes"],
+                   collectives=costs["collectives"])
+        n += 1
+    with open(args.out, "w") as f:
+        json.dump(records, f, indent=1)
+    print(f"reanalysed {n} cells -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

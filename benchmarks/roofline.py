@@ -1,0 +1,108 @@
+"""Roofline analysis from the dry-run's compiled artifacts.
+
+Per (arch x shape x mesh) cell:
+  compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+  memory term     = HLO_bytes / (chips * HBM_bw)
+  collective term = collective_bytes / (chips * link_bw)
+with TPU v5e-class constants.  cost_analysis() reports whole-program
+totals, so each term is divided by the device count; collective bytes are
+parsed from the per-device partitioned HLO (already per-device).
+
+Also reports MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) against
+HLO FLOPs (useful-compute fraction: catches remat/redundancy waste —
+NOTE: with ReBranch, trunk dW is intentionally skipped, so the *ideal*
+train FLOPs are ~(2/3 + 1/(3*16)) of the 6ND convention; both numbers
+are reported) and the dominant bottleneck per cell.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link (per chip, ring neighbour)
+
+
+def model_params_and_active(arch: str) -> tuple[float, float]:
+    from repro import configs
+    from repro.models import api
+    import jax
+    cfg = configs.get(arch)
+    shapes = jax.eval_shape(lambda k: api.init(k, cfg),
+                            jax.random.PRNGKey(0))
+    total = sum(l.size for l in jax.tree.leaves(shapes))
+    if cfg.family == "moe":
+        # active = non-expert params + activated experts (+shared)
+        import numpy as np
+        leaves = jax.tree_util.tree_flatten_with_path(shapes)[0]
+        expert = sum(l.size for p, l in leaves
+                     if "experts" in jax.tree_util.keystr(p))
+        frac = cfg.num_experts_per_tok / cfg.num_experts
+        active = (total - expert) + expert * frac
+        return float(total), float(active)
+    return float(total), float(total)
+
+
+def roofline_terms(rec: dict) -> dict:
+    # all inputs are PER-DEVICE (parsed from the partitioned HLO module)
+    flops = rec["flops"]
+    t_compute = flops / PEAK_FLOPS
+    t_memory = rec["hbm_bytes"] / HBM_BW
+    t_coll = rec["collective_bytes"] / ICI_BW
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    out = dict(rec)
+    out.update(t_compute=t_compute, t_memory=t_memory, t_collective=t_coll,
+               dominant=dominant,
+               bound=max(t_compute, t_memory, t_coll),
+               roofline_frac=t_compute / max(t_compute, t_memory, t_coll,
+                                             1e-30))
+    return out
+
+
+def analyse(results_path: str = "dryrun_results.json") -> list[dict]:
+    with open(results_path) as f:
+        records = json.load(f)
+    out = []
+    cache: dict[str, tuple[float, float]] = {}
+    for rec in records:
+        r = roofline_terms(rec)
+        arch = rec["arch"]
+        if arch not in cache:
+            cache[arch] = model_params_and_active(arch)
+        n_total, n_active = cache[arch]
+        tokens = rec["global_batch"] * (rec["seq"] if rec["kind"] != "decode"
+                                        else 1)
+        if rec["kind"] == "train":
+            model_flops = 6.0 * n_active * tokens
+        else:
+            model_flops = 2.0 * n_active * tokens
+        r["model_flops"] = model_flops
+        # flops are per-device; model_flops is global
+        r["useful_frac"] = (model_flops / rec["devices"]
+                            / max(rec["flops"], 1e-30))
+        out.append(r)
+    return out
+
+
+def run() -> list[str]:
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "dryrun_results.json")
+    if not os.path.exists(path):
+        return ["roofline,0,SKIPPED (run repro.launch.dryrun --out "
+                "dryrun_results.json first)"]
+    lines = []
+    for r in analyse(path):
+        name = f"{r['arch']}/{r['shape']}/{r.get('mesh_name', r['mesh'])}"
+        lines.append(
+            f"roofline_{name},0,"
+            f"tc={r['t_compute']*1e3:.3f}ms tm={r['t_memory']*1e3:.3f}ms "
+            f"tcoll={r['t_collective']*1e3:.3f}ms dom={r['dominant']} "
+            f"frac={r['roofline_frac']:.3f} useful={r['useful_frac']:.3f}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,28 @@
+"""Benchmark driver — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  Usage:
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+--fast skips the training-based figures (10/11), keeping the analytic
+tables and the roofline report.
+"""
+
+import sys
+
+
+def main() -> None:
+    fast = "--fast" in sys.argv
+    from benchmarks import (table1_macro, fig12_area_map,
+                            fig14_system_energy, roofline)
+    sections = [table1_macro, fig12_area_map, fig14_system_energy]
+    if not fast:
+        from benchmarks import fig10_generalization, fig11_du_sweep
+        sections[1:1] = [fig10_generalization, fig11_du_sweep]
+    sections.append(roofline)
+    print("name,us_per_call,derived")
+    for mod in sections:
+        for line in mod.run():
+            print(line, flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Shared harness for the ReBranch transfer-learning experiments
+(Figs. 10-12): pretrain a CNN on synthetic task A, tape-out to ROM,
+transfer to task B under different adaptation schemes."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.core import rebranch
+from repro.core.rebranch import ReBranchSpec
+from repro.data import synthetic
+from repro.models import cnn
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferConfig:
+    input_size: int = 16
+    num_classes: int = 10
+    batch: int = 32
+    pretrain_steps: int = 220
+    finetune_steps: int = 220
+    eval_batches: int = 10
+    lr: float = 2e-3
+    seed_a: int = 100           # task A (pretraining distribution)
+    seed_b: int = 200           # task B (transfer target)
+
+
+def small_vgg_cfg(spec: ReBranchSpec, tc: TransferConfig):
+    return cnn.CNNConfig(name="vgg8", num_classes=tc.num_classes,
+                         input_size=tc.input_size, rebranch=spec)
+
+
+def _loss(params, x, y, cfg):
+    logits = cnn.apply_vgg8(params, x, cfg)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+
+
+def _accuracy(params, cfg, tc, seed):
+    correct = total = 0
+    for i in range(tc.eval_batches):
+        x, y = synthetic.image_batch(seed, 10_000 + i, tc.batch,
+                                     tc.input_size, tc.num_classes)
+        pred = jnp.argmax(cnn.apply_vgg8(params, x, cfg), axis=-1)
+        correct += int(jnp.sum(pred == y))
+        total += tc.batch
+    return correct / total
+
+
+def _train(params, cfg, tc, seed, steps, lr=None):
+    trainable, frozen = rebranch.partition(params)
+    opt = optim.init(trainable)
+    ocfg = optim.AdamWConfig(lr=lr or tc.lr, weight_decay=0.0)
+
+    @jax.jit
+    def step_fn(t, opt, x, y):
+        loss, g = jax.value_and_grad(
+            lambda tt: _loss(rebranch.combine(tt, frozen), x, y, cfg))(t)
+        t, opt, _ = optim.update(g, opt, t, ocfg)
+        return t, opt, loss
+
+    for s in range(steps):
+        x, y = synthetic.image_batch(seed, s, tc.batch, tc.input_size,
+                                     tc.num_classes)
+        trainable, opt, loss = step_fn(trainable, opt, x, y)
+    return rebranch.combine(trainable, frozen)
+
+
+@functools.lru_cache(maxsize=4)
+def pretrained_dense(tc: TransferConfig = TransferConfig()):
+    """Task-A pretrained all-trainable model (cached across figures)."""
+    spec = ReBranchSpec(enabled=False)
+    cfg = small_vgg_cfg(spec, tc)
+    params = cnn.init_vgg8(jax.random.PRNGKey(0), cfg)
+    params = _train(params, cfg, tc, tc.seed_a, tc.pretrain_steps)
+    acc_a = _accuracy(params, cfg, tc, tc.seed_a)
+    return params, acc_a
+
+
+def run_transfer(scheme: str, tc: TransferConfig = TransferConfig(),
+                 d_ratio: int = 4, u_ratio: int = 4):
+    """scheme: 'rebranch' | 'full' | 'frozen' -> (acc_b, trainable_frac)."""
+    dense, _ = pretrained_dense(tc)
+    if scheme == "full":                 # all-SRAM upper bound
+        spec = ReBranchSpec(enabled=False)
+        cfg = small_vgg_cfg(spec, tc)
+        p = jax.tree.map(lambda x: x, dense)
+        p = _train(p, cfg, tc, tc.seed_b, tc.finetune_steps)
+        return _accuracy(p, cfg, tc, tc.seed_b), 1.0
+    spec = ReBranchSpec(d_ratio=d_ratio, u_ratio=u_ratio,
+                        branch_enabled=(scheme == "rebranch"))
+    cfg = small_vgg_cfg(spec, tc)
+    p = cnn.freeze_to_rom(dense, jax.random.PRNGKey(7), spec)
+    if scheme == "rebranch":
+        p = _train(p, cfg, tc, tc.seed_b, tc.finetune_steps)
+    else:                                # 'frozen': head-only adaptation
+        p = _train(p, cfg, tc, tc.seed_b, tc.finetune_steps)
+    acc = _accuracy(p, cfg, tc, tc.seed_b)
+    n_t = rebranch.trainable_count(p)
+    n_f = rebranch.frozen_count(p)
+    return acc, n_t / (n_t + n_f)

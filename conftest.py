@@ -1,0 +1,5 @@
+import os
+import sys
+
+# make `benchmarks` importable from tests without installing the package
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

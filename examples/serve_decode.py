@@ -1,0 +1,52 @@
+"""Serving example: batched prefill + autoregressive decode with the KV
+cache, on a ReBranch (frozen-trunk) model — the serve_step the multi-pod
+dry-run lowers, executed for real on a small config.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch import steps as steps_lib
+from repro.models import api
+
+ARCH = "gemma_2b"
+BATCH, PROMPT, GEN = 4, 32, 16
+
+
+def main():
+    cfg = configs.get_smoke(ARCH)
+    key = jax.random.PRNGKey(0)
+    params = api.init(key, cfg)
+
+    prompt = jax.random.randint(key, (BATCH, PROMPT), 0, cfg.vocab_size)
+    cache = api.init_cache(cfg, BATCH, PROMPT + GEN, dtype=jnp.float32)
+
+    t0 = time.time()
+    logits, cache = jax.jit(
+        lambda p, b, c: api.prefill(p, b, cfg, c))(params,
+                                                   {"tokens": prompt}, cache)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    print(f"prefill {BATCH}x{PROMPT}: {(time.time()-t0)*1e3:.0f} ms")
+
+    serve_step = jax.jit(steps_lib.make_serve_step(cfg))
+    out = [tok]
+    t0 = time.time()
+    for _ in range(GEN - 1):
+        tok, cache = serve_step(params, {"tokens": tok}, cache)
+        out.append(tok)
+    dt = (time.time() - t0) / (GEN - 1)
+    gen = jnp.concatenate(out, axis=1)
+    print(f"decoded {GEN} tokens/seq @ {dt*1e3:.1f} ms/step")
+    print("sample stream:", gen[0].tolist())
+    assert gen.shape == (BATCH, GEN)
+    assert bool(jnp.all((gen >= 0) & (gen < cfg.vocab_size)))
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""End-to-end driver: train a ~100M-param LM with a frozen ROM trunk for a
+few hundred steps on synthetic Markov data, with checkpoints + resume.
+
+This wraps repro.launch.train with a ~100M reduced-but-real config (the
+same code path the production launcher uses).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+
+import argparse
+import dataclasses
+
+from repro import configs
+from repro.launch import train as train_mod
+from repro.models.config import ArchConfig
+
+
+def lm_100m() -> ArchConfig:
+    """~100M-param decoder (gemma-flavoured, GQA, GeGLU)."""
+    return ArchConfig(
+        name="lm_100m", family="dense",
+        num_layers=8, d_model=512, num_heads=8, num_kv_heads=2,
+        d_ff=2048, vocab_size=8192, mlp_type="geglu",
+        dtype="float32", remat=False)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm100m")
+    args = ap.parse_args()
+
+    # register the config under a temp name so the driver can find it
+    import repro.configs as cfgs
+    import types, sys
+    mod = types.ModuleType("repro.configs.lm_100m")
+    mod.FULL = lm_100m()
+    mod.SMOKE = lm_100m()
+    sys.modules["repro.configs.lm_100m"] = mod
+
+    losses = train_mod.main([
+        "--arch", "lm_100m", "--smoke",
+        "--steps", str(args.steps),
+        "--batch", str(args.batch), "--seq", str(args.seq),
+        "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "100",
+        "--lr", "1e-3",
+    ])
+    assert losses[-1] < losses[0], "loss must decrease"
+    print(f"OK: loss {losses[0]:.3f} -> {losses[-1]:.3f} over "
+          f"{args.steps} steps")
+
+
+if __name__ == "__main__":
+    main()

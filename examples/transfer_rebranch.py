@@ -1,0 +1,41 @@
+"""The paper's core experiment (Figs. 10-11): ReBranch transfer learning.
+
+Pretrain a VGG-8-style CNN on synthetic task A, tape it out into ROM
+(int8, immutable), then transfer to task B by training ONLY the residual
+branch (1/16 of the parameters).  Compares against the all-SRAM full
+fine-tune upper bound and the frozen-trunk lower bound, and sweeps the
+compression ratio D*U.
+
+Run:  PYTHONPATH=src python examples/transfer_rebranch.py [--steps 220]
+"""
+
+import argparse
+
+from benchmarks import transfer_harness as th
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=220)
+    args = ap.parse_args()
+    tc = th.TransferConfig(pretrain_steps=args.steps,
+                           finetune_steps=args.steps)
+
+    _, acc_a = th.pretrained_dense(tc)
+    print(f"pretrained on task A: acc {acc_a:.3f}")
+
+    acc_full, _ = th.run_transfer("full", tc)
+    acc_frozen, _ = th.run_transfer("frozen", tc)
+    print(f"task B  full fine-tune (all-SRAM): {acc_full:.3f}")
+    print(f"task B  frozen trunk (no branch) : {acc_frozen:.3f}")
+
+    print("\nReBranch D/U sweep (paper Fig. 11; D=U=4 is the paper's pick):")
+    for d, u in [(2, 2), (4, 4), (8, 8)]:
+        acc, frac = th.run_transfer("rebranch", tc, d_ratio=d, u_ratio=u)
+        print(f"  D={d} U={u} (compression {d*u:2d}x, trainable "
+              f"{frac:.3f}): acc {acc:.3f}  "
+              f"(gap to full fine-tune {acc_full-acc:+.3f})")
+
+
+if __name__ == "__main__":
+    main()

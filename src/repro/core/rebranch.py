@@ -1,0 +1,251 @@
+"""ReBranch (paper §3.2, Fig. 7): frozen ROM trunk + small trainable branch.
+
+    y = Trunk_ROM(x) + Decompress(ResCore(Compress(x))) (+ bias)
+
+* Trunk: int8 weights + per-channel scales, physically immutable ("ROM").
+* Compress ``C``  (d_in  -> d_in//D)  : fixed point-wise projection (ROM).
+* ResCore ``core``(d_in//D -> d_out//U): the ONLY trainable tensor ("SRAM").
+* Decompress ``U``(d_out//U -> d_out) : fixed point-wise projection (ROM).
+
+With the paper's optimum D=U=4 the branch holds 1/16 of the trunk's
+parameters (Fig. 11).  ``core`` is zero-initialised so a freshly-frozen
+model is exactly the pretrained model (branch contributes 0).
+
+Parameter convention: every pytree whose dict key is ``"rom"`` is frozen —
+excluded from autodiff, optimizer state, gradient collectives and
+checkpoints.  ``partition``/``combine`` implement that split.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cim as cim_lib
+from repro.core import quant
+
+ROM_KEY = "rom"
+
+
+@dataclasses.dataclass(frozen=True)
+class ReBranchSpec:
+    d_ratio: int = 4                 # compression ratio D (paper Fig. 11)
+    u_ratio: int = 4                 # decompression ratio U
+    enabled: bool = True             # False -> plain trainable linear
+    trunk_impl: str = "int8_native"  # 'int8_native' | 'dequant' | 'pallas'
+    cim: cim_lib.CiMConfig = dataclasses.field(
+        default_factory=lambda: cim_lib.CiMConfig(mode="ideal"))
+    param_dtype: Any = jnp.float32   # branch/scale dtype
+    branch_enabled: bool = True      # trunk-only (frozen, no adapter) if False
+
+    @property
+    def compression(self) -> int:
+        return self.d_ratio * self.u_ratio
+
+
+# ---------------------------------------------------------------------------
+# pytree partitioning: ROM (frozen) vs SRAM (trainable)
+# ---------------------------------------------------------------------------
+
+def _is_none(x) -> bool:
+    return x is None
+
+
+def partition(params):
+    """Split params into (trainable, frozen) trees; non-members are None."""
+    def walk(node, in_rom):
+        if isinstance(node, dict):
+            train, froz = {}, {}
+            for k, v in node.items():
+                t, f = walk(v, in_rom or k == ROM_KEY)
+                train[k], froz[k] = t, f
+            return train, froz
+        if isinstance(node, (list, tuple)):
+            pairs = [walk(v, in_rom) for v in node]
+            typ = type(node)
+            return typ(p[0] for p in pairs), typ(p[1] for p in pairs)
+        return (None, node) if in_rom else (node, None)
+
+    return walk(params, False)
+
+
+def combine(trainable, frozen):
+    """Inverse of :func:`partition`."""
+    return jax.tree.map(
+        lambda a, b: a if a is not None else b,
+        trainable, frozen, is_leaf=_is_none)
+
+
+def trainable_count(params) -> int:
+    t, _ = partition(params)
+    return sum(x.size for x in jax.tree.leaves(t))
+
+
+def frozen_count(params) -> int:
+    _, f = partition(params)
+    return sum(x.size for x in jax.tree.leaves(f))
+
+
+# ---------------------------------------------------------------------------
+# Trunk matmul: frozen int8 path with a straight-through backward
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def trunk_matmul(cfg: cim_lib.CiMConfig, out_axes, x, w_q, w_scale):
+    """y = CiM(quantize(x), w_q) * (sx * w_scale);  frozen-weight matmul.
+
+    Forward runs the (possibly non-ideal) CiM model on int8 operands;
+    backward is the straight-through estimator  dx = g @ dequant(w)^T.
+    No dW is ever produced (the ROM cannot be written).
+
+    out_axes (static, optional): logical sharding annotation placed on the
+    RAW dot output (and on dx in the backward) so the SPMD partitioner can
+    turn row-parallel partial-sum all-reduces into reduce-scatters.
+    """
+    x_q, sx = quant.quantize_activations(x)
+    out = cim_lib.cim_matmul_model(x_q, w_q, cfg)
+    if out_axes is not None:
+        from repro.distributed.sharding import shard
+        out = shard(out, *out_axes)
+    return (out * sx).astype(x.dtype) * w_scale.astype(x.dtype)
+
+
+def _trunk_fwd(cfg, out_axes, x, w_q, w_scale):
+    return trunk_matmul(cfg, out_axes, x, w_q, w_scale), (w_q, w_scale)
+
+
+def _trunk_bwd(cfg, out_axes, res, g):
+    w_q, w_scale = res
+    w_deq = w_q.astype(g.dtype) * w_scale.astype(g.dtype)   # [K, N]
+    dx = jnp.einsum("...n,kn->...k", g, w_deq)
+    if out_axes is not None:
+        # bwd of a column-parallel trunk is row-parallel: same RS rewrite
+        from repro.distributed.sharding import shard
+        dx = shard(dx, *out_axes)
+    zero = lambda a: np.zeros(a.shape, jax.dtypes.float0)
+    return dx, zero(w_q), zero(w_scale)
+
+
+trunk_matmul.defvjp(_trunk_fwd, _trunk_bwd)
+
+
+def trunk_matmul_dequant(cfg, x, w_q, w_scale):
+    """Paper-faithful *baseline* trunk path: dequantise to bf16/f32 and use a
+    dense matmul with fake-quantised activations (STE built in).  2x the
+    weight HBM traffic of the int8-native path; kept as the reference the
+    §Perf optimization is measured against."""
+    del cfg
+    x_hq = quant.fake_quant_ste(x)
+    w = w_q.astype(x.dtype) * w_scale.astype(x.dtype)
+    return x_hq @ w
+
+
+# ---------------------------------------------------------------------------
+# ReBranch linear layer
+# ---------------------------------------------------------------------------
+
+def init_linear(key, d_in: int, d_out: int, spec: ReBranchSpec,
+                *, w_init: jax.Array | None = None,
+                use_bias: bool = False, name_scale: float = 1.0):
+    """Create ReBranch linear params.
+
+    If ``w_init`` is given the trunk ROM image is built from it (freeze a
+    pretrained matrix); otherwise the trunk is randomly initialised and
+    frozen (pretraining-from-scratch is done *before* freezing, see
+    examples/transfer_rebranch.py).
+    """
+    kw, kc, ku = jax.random.split(key, 3)
+    dt = spec.param_dtype
+    if w_init is None:
+        w_init = jax.random.normal(kw, (d_in, d_out), dt)
+        w_init = w_init * (name_scale / np.sqrt(d_in))
+    if not spec.enabled:
+        p = {"sram": {"w": w_init.astype(dt)}}
+        if use_bias:
+            p["sram"]["b"] = jnp.zeros((d_out,), dt)
+        return p
+
+    w_q, w_scale = quant.quantize_weights(w_init, axis=0)
+    rom = {"w_q": w_q, "w_scale": w_scale.astype(dt)}
+    p = {"rom": rom, "sram": {}}
+    if spec.branch_enabled:
+        d_c = max(1, d_in // spec.d_ratio)
+        d_u = max(1, d_out // spec.u_ratio)
+        # Fixed (ROM) projections: scaled Gaussian — an oblivious JL-style
+        # sketch; frozen at "tape-out".
+        rom["C"] = (jax.random.normal(kc, (d_in, d_c), dt) / np.sqrt(d_in))
+        rom["U"] = (jax.random.normal(ku, (d_u, d_out), dt) / np.sqrt(d_u))
+        p["sram"]["core"] = jnp.zeros((d_c, d_u), dt)   # branch starts at 0
+    if use_bias:
+        p["sram"]["b"] = jnp.zeros((d_out,), dt)
+    return p
+
+
+def apply_linear(params, x, spec: ReBranchSpec, t1_axes=None,
+                 out_axes=None):
+    """Apply a ReBranch linear layer (or a plain linear if disabled).
+
+    t1_axes: optional logical-axis annotation for the branch compress
+    output.  Row-parallel trunks (o/down projections) pass
+    ('batch','seq','mlp') so GSPMD reduce-scatters t1 instead of
+    all-reducing + re-gathering the d_in/D-wide intermediate.
+    out_axes: optional constraint applied DIRECTLY to the trunk matmul
+    output (before the branch add) — placing it adjacent to the dot lets
+    the SPMD partitioner turn the row-parallel partial-sum all-reduce
+    into a reduce-scatter.
+    """
+    if not spec.enabled:
+        y = x @ params["sram"]["w"].astype(x.dtype)
+        b = params["sram"].get("b")
+        return y if b is None else y + b.astype(x.dtype)
+
+    rom, sram = params["rom"], params["sram"]
+    if spec.trunk_impl == "dequant":
+        y = trunk_matmul_dequant(spec.cim, x, rom["w_q"], rom["w_scale"])
+    elif spec.trunk_impl == "pallas":
+        from repro.kernels import ops as kops  # deferred: optional dep
+        y = kops.trunk_matmul_pallas(spec.cim, x, rom["w_q"], rom["w_scale"])
+    else:
+        y = trunk_matmul(spec.cim, out_axes, x, rom["w_q"], rom["w_scale"])
+
+    if spec.branch_enabled and "core" in sram:
+        c = rom["C"].astype(x.dtype)
+        u = rom["U"].astype(x.dtype)
+        core = sram["core"].astype(x.dtype)
+        # Reassociated epilogue: (x@C) @ (core@U).  core@U is a tiny
+        # [d_in/D, d_out] precompute whose output sharding matches the
+        # trunk's, so the branch adds NO collectives and NO wide
+        # intermediate activation ((t1@core)@U would materialise a
+        # d_out/U-wide tensor and force an all-gather under TP).
+        t1 = x @ c
+        if t1_axes is not None:
+            from repro.distributed.sharding import shard
+            t1 = shard(t1, *t1_axes)
+        y = y + t1 @ (core @ u)
+    b = sram.get("b")
+    return y if b is None else y + b.astype(x.dtype)
+
+
+def freeze_to_rom(params_dense, key, spec: ReBranchSpec):
+    """Convert a tree of plain linears ({'sram': {'w': ..}}) into ReBranch
+    form — the 'tape-out' step: quantise trunks into ROM, attach branches."""
+    def conv(path, node):
+        if isinstance(node, dict) and "sram" in node and "w" in node.get("sram", {}):
+            w = node["sram"]["w"]
+            sub = jax.random.fold_in(key, hash(path) % (2 ** 31))
+            p = init_linear(sub, w.shape[0], w.shape[1], spec, w_init=w,
+                            use_bias="b" in node["sram"])
+            if "b" in node["sram"]:
+                p["sram"]["b"] = node["sram"]["b"]
+            return p
+        if isinstance(node, dict):
+            return {k: conv(path + (k,), v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(conv(path + (i,), v) for i, v in enumerate(node))
+        return node
+    return conv((), params_dense)

@@ -1,0 +1,47 @@
+"""ROM image utilities: the immutable trunk as a content-addressed artifact.
+
+The ROM contents are fixed at "tape-out" (init / freeze time).  They are
+never checkpointed — checkpoints store only the SRAM (trainable) state plus
+the ROM fingerprint, and restore validates the fingerprint against the ROM
+image the process booted with (paper: ROM is physically immutable, so
+persisting it per-checkpoint would be waste; at 1000-node scale this cuts
+checkpoint volume by ~16x together with the branch-only optimizer state).
+"""
+
+from __future__ import annotations
+
+import hashlib
+
+import jax
+import numpy as np
+
+from repro.core import rebranch
+
+
+def rom_fingerprint(params) -> str:
+    """SHA-256 over every ROM leaf (order-stable via sorted tree paths)."""
+    _, frozen = rebranch.partition(params)
+    h = hashlib.sha256()
+    leaves = jax.tree_util.tree_flatten_with_path(frozen)[0]
+    for path, leaf in sorted(leaves, key=lambda kv: jax.tree_util.keystr(kv[0])):
+        if leaf is None:
+            continue
+        h.update(jax.tree_util.keystr(path).encode())
+        arr = np.asarray(jax.device_get(leaf))
+        h.update(str(arr.dtype).encode())
+        h.update(str(arr.shape).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+def rom_bytes(params) -> int:
+    """Total ROM image size in bytes (what would be mask-programmed)."""
+    _, frozen = rebranch.partition(params)
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree.leaves(frozen))
+
+
+def sram_bytes(params) -> int:
+    trainable, _ = rebranch.partition(params)
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree.leaves(trainable))

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the CiM compute hot-spots (+ pure-jnp oracles).
+
+cim_matmul      : the ROM-CiM macro (subarray tiling, bit-serial, 5-bit ADC)
+rebranch_matmul : fused frozen-trunk int8 + low-rank branch matmul
+"""
+
+from repro.kernels.ops import cim_matmul, rebranch_matmul, trunk_matmul_pallas
+from repro.kernels import ref
+
+__all__ = ["cim_matmul", "rebranch_matmul", "trunk_matmul_pallas", "ref"]

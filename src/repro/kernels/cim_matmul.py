@@ -1,0 +1,145 @@
+"""Pallas TPU kernel: the ROM-CiM macro matmul (paper §3.1, Fig. 5).
+
+TPU-native adaptation of the analogue macro: the 128-row subarray becomes
+the K-block of the BlockSpec tiling; each bit-line partial sum is an MXU
+dot over one subarray slice; the 5-bit ADC transfer function is applied to
+partial sums in VMEM before shift-add recombination into the accumulator.
+
+Grid: (M/bm, N/bn, K/bk) with K innermost so the f32 accumulator block
+stays resident in VMEM across the contraction.  bk is a multiple of 128
+(``rows_per_subarray``) so subarray boundaries align with the global K
+offsets — the kernel is bit-compatible with core.cim.cim_matmul_model.
+
+Modes: 'ideal' (plain int8 MXU dot -> int32 — the deployment fast path),
+'per_subarray', 'bitserial' (fidelity simulation, same math as core.cim).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import cim as cim_lib
+
+
+def _dot_f32(a, b):
+    return jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+def _dot_int8(a, b):
+    return jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.int32)
+
+
+def _adc(psum, full_range, cfg: cim_lib.CiMConfig):
+    rng = full_range * cfg.adc_range_frac
+    lsb = rng / cfg.adc_levels
+    # +1e-3 threshold bias: see core.cim.adc_transfer (half-boundary
+    # determinism across model/kernel float pipelines)
+    return jnp.clip(jnp.round(psum / lsb + 1e-3), 0, cfg.adc_levels) * lsb
+
+
+def _signed_adc(psum, full_range, cfg: cim_lib.CiMConfig):
+    rng = full_range * cfg.psum_range_frac
+    half = cfg.adc_levels / 2.0
+    lsb = rng / half
+    return jnp.clip(jnp.round(psum / lsb + 1e-3), -half, half) * lsb
+
+
+def _cim_kernel(cfg: cim_lib.CiMConfig, x_ref, w_ref, o_ref):
+    """One (bm, bn) output block; K accumulated across grid axis 2."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]                                # int8 (bm, bk)
+    w = w_ref[...]                                # int8 (bk, bn)
+    rows = cfg.rows_per_subarray
+
+    if cfg.mode == "ideal":
+        acc = _dot_int8(x, w).astype(jnp.float32)
+
+    elif cfg.mode == "per_subarray":
+        s = x.shape[1] // rows
+        full_range = rows * 127.0
+        acc = jnp.zeros_like(o_ref)
+        for si in range(s):
+            xs = x[:, si * rows:(si + 1) * rows].astype(jnp.float32)
+            ws = w[si * rows:(si + 1) * rows, :].astype(jnp.float32)
+            acc = acc + _signed_adc(_dot_f32(xs, ws), full_range, cfg)
+
+    elif cfg.mode == "bitserial":
+        s = x.shape[1] // rows
+        gmax = cfg.group_max
+        mag_bits = cfg.weight_bits - 1
+        act_groups = -(-(cfg.act_bits - 1) // cfg.act_group_bits)
+        x_i = x.astype(jnp.int32)
+        w_i = w.astype(jnp.int32)
+        acc = jnp.zeros_like(o_ref)
+        for sa, a_part in ((0, jnp.maximum(x_i, 0)), (1, jnp.maximum(-x_i, 0))):
+            for sw, w_part in ((0, jnp.maximum(w_i, 0)),
+                               (1, jnp.maximum(-w_i, 0))):
+                sign = 1.0 if sa == sw else -1.0
+                for si in range(s):
+                    a_s = a_part[:, si * rows:(si + 1) * rows]
+                    w_s = w_part[si * rows:(si + 1) * rows, :]
+                    for g in range(act_groups):
+                        a_g = ((a_s >> (g * cfg.act_group_bits)) & gmax
+                               ).astype(jnp.float32)
+                        for j in range(mag_bits):
+                            w_j = ((w_s >> j) & 1).astype(jnp.float32)
+                            counts = _dot_f32(a_g, w_j)
+                            # tape-out-known per-column sense references
+                            popcount = jnp.sum(w_j, axis=0, keepdims=True)
+                            rng = jnp.maximum(popcount * gmax, 1.0)
+                            sensed = _adc(counts, rng, cfg)
+                            acc = acc + sign * (4.0 ** g) * (2.0 ** j) * sensed
+    else:
+        raise ValueError(f"unknown CiM mode: {cfg.mode!r}")
+
+    o_ref[...] += acc
+
+
+def cim_matmul_pallas(
+    x_q: jax.Array,                 # int8 [M, K]
+    w_q: jax.Array,                 # int8 [K, N]
+    cfg: cim_lib.CiMConfig = cim_lib.DEFAULT_CIM,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,             # 4 subarrays per VMEM block
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Blocked CiM matmul; returns f32 [M, N] integer-valued results."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m, k = x_q.shape
+    k2, n = w_q.shape
+    assert k == k2, (x_q.shape, w_q.shape)
+    rows = cfg.rows_per_subarray
+    assert block_k % rows == 0, "K blocks must hold whole subarrays"
+
+    bm, bn, bk = min(block_m, m), min(block_n, n), block_k
+    pad_m, pad_n, pad_k = (-m) % bm, (-n) % bn, (-k) % bk
+    xp = jnp.pad(x_q, ((0, pad_m), (0, pad_k)))
+    wp = jnp.pad(w_q, ((0, pad_k), (0, pad_n)))
+    gm, gn, gk = xp.shape[0] // bm, wp.shape[1] // bn, xp.shape[1] // bk
+
+    out = pl.pallas_call(
+        functools.partial(_cim_kernel, cfg),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], wp.shape[1]),
+                                       jnp.float32),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :n]

@@ -1,0 +1,52 @@
+"""Jit'd public wrappers for the Pallas kernels (+ STE backward rules)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cim as cim_lib
+from repro.core import quant
+from repro.kernels.cim_matmul import cim_matmul_pallas
+from repro.kernels.rebranch_matmul import rebranch_matmul_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def cim_matmul(x_q, w_q, cfg: cim_lib.CiMConfig = cim_lib.DEFAULT_CIM):
+    """int8 x int8 CiM matmul via the Pallas macro-simulation kernel."""
+    return cim_matmul_pallas(x_q, w_q, cfg)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def trunk_matmul_pallas(cfg: cim_lib.CiMConfig, x, w_q, w_scale):
+    """Frozen-trunk matmul on the Pallas CiM kernel with an STE backward.
+
+    Drop-in for core.rebranch.trunk_matmul (spec.trunk_impl == 'pallas').
+    """
+    x_q, sx = quant.quantize_activations(x)
+    out = cim_matmul_pallas(x_q, w_q, cfg)
+    return (out * sx).astype(x.dtype) * w_scale.astype(x.dtype)
+
+
+def _fwd(cfg, x, w_q, w_scale):
+    return trunk_matmul_pallas(cfg, x, w_q, w_scale), (w_q, w_scale)
+
+
+def _bwd(cfg, res, g):
+    w_q, w_scale = res
+    w_deq = w_q.astype(g.dtype) * w_scale.astype(g.dtype)
+    dx = jnp.einsum("...n,kn->...k", g, w_deq)
+    zero = lambda a: np.zeros(a.shape, jax.dtypes.float0)
+    return dx, zero(w_q), zero(w_scale)
+
+
+trunk_matmul_pallas.defvjp(_fwd, _bwd)
+
+
+@jax.jit
+def rebranch_matmul(x, w_q, w_scale, c, core, u):
+    """Fused trunk+branch ReBranch layer forward (beyond-paper fast path)."""
+    return rebranch_matmul_pallas(x, w_q, w_scale, c, core, u)

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Each kernel in this package has a reference implementation here with
+*identical* numerics (same quantisation granularity, same ADC model, same
+blocking where it affects results).  Tests sweep shapes/dtypes and
+assert_allclose kernel-vs-oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cim as cim_lib
+from repro.core.quant import INT8_MAX
+
+
+def cim_matmul_ref(x_q: jax.Array, w_q: jax.Array,
+                   cfg: cim_lib.CiMConfig) -> jax.Array:
+    """Oracle for kernels.cim_matmul: the core CiM macro model."""
+    return cim_lib.cim_matmul_model(x_q, w_q, cfg)
+
+
+def _block_quant(x: jax.Array, block_k: int):
+    """Per-(row, k-block) dynamic int8 quantisation — matches the fused
+    kernel's in-VMEM quantisation granularity exactly."""
+    m, k = x.shape
+    assert k % block_k == 0
+    xb = x.reshape(m, k // block_k, block_k)
+    absmax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-8) / INT8_MAX
+    x_q = jnp.clip(jnp.round(xb / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return x_q, scale
+
+
+def rebranch_matmul_ref(x: jax.Array, w_q: jax.Array, w_scale: jax.Array,
+                        c: jax.Array, core: jax.Array, u: jax.Array,
+                        block_k: int = 512) -> jax.Array:
+    """Oracle for kernels.rebranch_matmul (fused trunk + branch).
+
+      trunk = sum_kb (quant_kb(x) @ w_q[kb]) * scale_kb        (int8 path)
+      out   = trunk * w_scale + ((x @ C) @ core) @ U
+    """
+    m, k = x.shape
+    pad = (-k) % block_k
+    if pad:
+        xp = jnp.pad(x, ((0, 0), (0, pad)))
+        wp = jnp.pad(w_q, ((0, pad), (0, 0)))
+        cp = jnp.pad(c, ((0, pad), (0, 0)))
+    else:
+        xp, wp, cp = x, w_q, c
+    x_q, scale = _block_quant(xp.astype(jnp.float32), block_k)
+    wb = wp.reshape(-1, block_k, w_q.shape[1])
+    acc = jnp.einsum(
+        "msk,skn->msn",
+        x_q.astype(jnp.float32) * scale,
+        wb.astype(jnp.float32),
+    ).sum(axis=1)
+    trunk = acc * w_scale.reshape(1, -1).astype(jnp.float32)
+    t1 = xp.astype(jnp.float32) @ cp.astype(jnp.float32)
+    branch = (t1 @ core.astype(jnp.float32)) @ u.astype(jnp.float32)
+    return (trunk + branch).astype(x.dtype)

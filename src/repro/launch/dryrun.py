@@ -1,0 +1,225 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST run before any other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this lowers the real step function (train_step for train_4k,
+prefill_step for prefill_32k, serve_step for decode shapes) against
+ShapeDtypeStruct inputs on the production mesh, compiles it, and records:
+
+  * memory_analysis  (bytes per device — proves it fits)
+  * cost_analysis    (HLO FLOPs / bytes — roofline compute & memory terms)
+  * collective bytes (parsed from the compiled HLO — roofline comm term)
+
+Failures here (sharding mismatch, OOM at compile, unsupported collective)
+are bugs in the system.  Usage:
+
+  PYTHONPATH=src python -m repro.launch.dryrun [--arch yi_34b]
+      [--shape train_4k] [--multi-pod] [--single-pod] [--out out.json]
+"""
+
+import argparse
+import gzip
+import json
+import os as _os
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs, optim
+from repro.core import rebranch
+from repro.distributed import sharding as shd
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_production_mesh
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing (roofline comm term)
+# ---------------------------------------------------------------------------
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _op_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-operand sizes of every collective op in the HLO."""
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"(?:ROOT )?[%\w.\-]+ = \(?([^)]*?)\)? (\S+)\(", s)
+        if not m:
+            continue
+        opname = m.group(2).split(".")[0]
+        for c in _COLLECTIVES:
+            if opname == c or opname == c + "-start":
+                out[c] += _op_bytes(m.group(1))
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-cell dry-run
+# ---------------------------------------------------------------------------
+
+def lower_cell(arch: str, shape_name: str, mesh, *, donate: bool = True):
+    """Lower + compile one cell; returns the result record."""
+    cfg = configs.get(arch)
+    seq, gbatch, kind = dict(
+        (s, (q, b, k)) for s, q, b, k in configs.cells(arch))[shape_name]
+
+    t0 = time.time()
+    with shd.use_mesh(mesh), mesh:
+        t_sh, f_sh, opt_sh, param_shapes = steps_lib.model_state_shardings(
+            cfg, mesh)
+        in_specs = steps_lib.input_specs(cfg, seq, gbatch, kind)
+        in_sh = steps_lib.batch_shardings(cfg, mesh, in_specs, gbatch)
+        t_shapes, f_shapes = rebranch.partition(param_shapes)
+
+        if kind == "train":
+            step = steps_lib.make_train_step(cfg)
+            opt_shapes = jax.eval_shape(optim.init, t_shapes)
+            jitted = jax.jit(
+                step,
+                in_shardings=(t_sh, f_sh, opt_sh, in_sh),
+                donate_argnums=(0, 2) if donate else (),
+            )
+            lowered = jitted.lower(t_shapes, f_shapes, opt_shapes, in_specs)
+        elif kind == "prefill":
+            step = steps_lib.make_prefill_step(cfg, gbatch, seq)
+            jitted = jax.jit(step, in_shardings=(
+                rebranch.combine(t_sh, f_sh), in_sh))
+            lowered = jitted.lower(param_shapes, in_specs)
+        else:  # decode
+            step = steps_lib.make_serve_step(cfg)
+            c_shapes = steps_lib.cache_specs(cfg, gbatch, seq)
+            c_sh = steps_lib.cache_shardings(cfg, mesh, c_shapes)
+            jitted = jax.jit(
+                step,
+                in_shardings=(rebranch.combine(t_sh, f_sh), in_sh, c_sh),
+                donate_argnums=(2,) if donate else (),
+            )
+            lowered = jitted.lower(param_shapes, in_specs, c_shapes)
+
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        txt = compiled.as_text()
+        # correct per-device costs incl. while-loop trip counts (XLA's own
+        # cost_analysis counts scan bodies once — see hlo_cost.py)
+        from repro.launch import hlo_cost
+        costs = hlo_cost.analyse_text(txt)
+        hlo_dir = _os.environ.get("DRYRUN_HLO_DIR")
+        if hlo_dir:
+            _os.makedirs(hlo_dir, exist_ok=True)
+            mesh_tag = "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
+            with gzip.open(_os.path.join(
+                    hlo_dir, f"{arch}_{shape_name}_{mesh_tag}.hlo.gz"),
+                    "wt") as f:
+                f.write(txt)
+
+    n_dev = mesh.size
+    rec = {
+        "arch": arch, "shape": shape_name, "kind": kind,
+        "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+        "devices": n_dev,
+        "seq": seq, "global_batch": gbatch,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops": costs["flops"],
+        "hbm_bytes": costs["hbm_bytes"],
+        "xla_flops": float(cost.get("flops", -1)),
+        "collective_bytes": costs["collective_bytes"],
+        "collectives": costs["collectives"],
+        "argument_bytes_per_dev": getattr(mem, "argument_size_in_bytes", 0),
+        "output_bytes_per_dev": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes_per_dev": getattr(mem, "temp_size_in_bytes", 0),
+        "peak_bytes_per_dev": (
+            getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "output_size_in_bytes", 0)
+            + getattr(mem, "temp_size_in_bytes", 0)),
+    }
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="only the 2x16x16 mesh")
+    ap.add_argument("--single-pod", action="store_true",
+                    help="only the 16x16 mesh")
+    ap.add_argument("--out", default=None, help="write JSON records here")
+    ap.add_argument("--no-donate", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else configs.ALL_ARCHS
+    meshes = []
+    if not args.multi_pod:
+        meshes.append(("single_pod", make_production_mesh(multi_pod=False)))
+    if not args.single_pod:
+        meshes.append(("multi_pod", make_production_mesh(multi_pod=True)))
+
+    records, failures = [], []
+    for arch in archs:
+        for shape_name, *_ in configs.cells(arch):
+            if args.shape and shape_name != args.shape:
+                continue
+            for mesh_name, mesh in meshes:
+                tag = f"{arch} x {shape_name} x {mesh_name}"
+                try:
+                    rec = lower_cell(arch, shape_name, mesh,
+                                     donate=not args.no_donate)
+                    rec["mesh_name"] = mesh_name
+                    records.append(rec)
+                    print(f"[ok] {tag}: "
+                          f"peak={rec['peak_bytes_per_dev']/2**30:.2f}GiB/dev "
+                          f"flops={rec['flops']:.3g} "
+                          f"coll={rec['collective_bytes']/2**20:.1f}MiB "
+                          f"(lower {rec['lower_s']}s compile "
+                          f"{rec['compile_s']}s)", flush=True)
+                except Exception as e:
+                    failures.append((tag, repr(e)))
+                    print(f"[FAIL] {tag}: {e!r}", flush=True)
+                    traceback.print_exc()
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+    print(f"\n{len(records)} cells ok, {len(failures)} failed")
+    for tag, err in failures:
+        print(f"  FAIL {tag}: {err[:200]}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

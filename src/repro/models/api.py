@@ -1,0 +1,54 @@
+"""Family-dispatched model API: one interface for every architecture.
+
+  init(key, cfg)                          -> params
+  forward(params, batch, cfg)             -> logits          (train)
+  prefill(params, batch, cfg, cache)      -> (logits, cache) (serve)
+  decode_step(params, tokens, cfg, cache) -> (logits, cache) (serve)
+  init_cache(cfg, batch, max_len)         -> cache
+"""
+
+from __future__ import annotations
+
+from repro.models import hybrid, ssm, transformer
+from repro.models.config import ArchConfig
+
+_FAMILY = {
+    "dense": transformer, "vlm": transformer, "audio": transformer,
+    "moe": transformer,            # moe block dispatched inside transformer
+    "ssm": ssm,
+    "hybrid": hybrid,
+}
+
+
+def _mod(cfg: ArchConfig):
+    return _FAMILY[cfg.family]
+
+
+def init(key, cfg: ArchConfig):
+    return _mod(cfg).init(key, cfg)
+
+
+def forward(params, batch, cfg: ArchConfig):
+    return _mod(cfg).forward(params, batch, cfg)
+
+
+def features(params, batch, cfg: ArchConfig):
+    return _mod(cfg).features(params, batch, cfg)
+
+
+def apply_head(params, x, cfg: ArchConfig):
+    return _mod(cfg).apply_head(params, x, cfg)
+
+
+def prefill(params, batch, cfg: ArchConfig, cache):
+    return _mod(cfg).prefill(params, batch, cfg, cache)
+
+
+def decode_step(params, tokens, cfg: ArchConfig, cache):
+    return _mod(cfg).decode_step(params, tokens, cfg, cache)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
+    import jax.numpy as jnp
+    dtype = dtype or jnp.bfloat16
+    return _mod(cfg).init_cache(cfg, batch, max_len, dtype)

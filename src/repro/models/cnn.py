@@ -1,0 +1,339 @@
+"""The paper's own models: VGG-8, ResNet-18, DarkNet-19, Tiny-YOLO.
+
+ReBranchConv (paper Fig. 7-8): frozen int8 trunk conv (ROM) in parallel
+with  1x1 compress -> KxK trainable core conv -> 1x1 decompress  (branch;
+the point-wise (de)compression layers are fixed, only the core trains).
+With D=U=4 the branch holds 1/16 of the trunk parameters.
+
+NHWC layout.  Trunk conv runs on fake-quantised weights+activations (STE);
+the exact CiM fidelity path (im2col through core.cim) is available via
+spec.cim.mode for accuracy studies.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cim as cim_lib
+from repro.core import quant
+from repro.core.rebranch import ReBranchSpec
+from repro.models.config import ArchConfig
+
+
+# ---------------------------------------------------------------------------
+# ReBranch convolution
+# ---------------------------------------------------------------------------
+
+def _conv(x, w, stride=1, padding="SAME"):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def init_conv(key, k: int, c_in: int, c_out: int, spec: ReBranchSpec,
+              *, w_init=None):
+    ks = jax.random.split(key, 3)
+    if w_init is None:
+        w_init = (jax.random.normal(ks[0], (k, k, c_in, c_out), jnp.float32)
+                  * np.sqrt(2.0 / (k * k * c_in)))
+    if not spec.enabled:
+        return {"sram": {"w": w_init}}
+    absmax = jnp.max(jnp.abs(w_init), axis=(0, 1, 2), keepdims=True)
+    scale = jnp.maximum(absmax, 1e-8) / 127.0
+    w_q = jnp.clip(jnp.round(w_init / scale), -127, 127).astype(jnp.int8)
+    p = {"rom": {"w_q": w_q, "w_scale": scale}, "sram": {}}
+    if spec.branch_enabled:
+        c_c = max(1, c_in // spec.d_ratio)
+        c_u = max(1, c_out // spec.u_ratio)
+        p["rom"]["C"] = (jax.random.normal(ks[1], (1, 1, c_in, c_c))
+                         / np.sqrt(c_in)).astype(jnp.float32)
+        p["rom"]["U"] = (jax.random.normal(ks[2], (1, 1, c_u, c_out))
+                         / np.sqrt(c_u)).astype(jnp.float32)
+        p["sram"]["core"] = jnp.zeros((k, k, c_c, c_u), jnp.float32)
+    return p
+
+
+def apply_conv(params, x, spec: ReBranchSpec, stride: int = 1):
+    if not spec.enabled:
+        return _conv(x, params["sram"]["w"], stride)
+    rom = params["rom"]
+    w = rom["w_q"].astype(x.dtype) * rom["w_scale"].astype(x.dtype)
+    y = _conv(quant.fake_quant_ste(x), w, stride)
+    if spec.branch_enabled and "core" in params["sram"]:
+        t = _conv(x, rom["C"].astype(x.dtype), 1)
+        t = _conv(t, params["sram"]["core"].astype(x.dtype), stride)
+        y = y + _conv(t, rom["U"].astype(x.dtype), 1)
+    return y
+
+
+def conv_trainable_frac(spec: ReBranchSpec) -> float:
+    return 1.0 / (spec.d_ratio * spec.u_ratio)
+
+
+def freeze_to_rom(params, key, spec: ReBranchSpec):
+    """'Tape-out' a pretrained all-trainable CNN: every plain conv
+    ({'sram': {'w': [k,k,cin,cout]}}) becomes a ReBranch conv (int8 ROM
+    trunk + fixed C/U + zero-init trainable core).  Dense heads (2D 'w')
+    and BN stay trainable ("SRAM")."""
+    idx = [0]
+
+    def conv_node(node):
+        w = node["sram"]["w"]
+        if w.ndim != 4:
+            return node                      # dense head: stays SRAM
+        idx[0] += 1
+        sub = jax.random.fold_in(key, idx[0])
+        return init_conv(sub, w.shape[0], w.shape[2], w.shape[3], spec,
+                         w_init=w)
+
+    def walk(node):
+        if isinstance(node, dict):
+            if set(node.keys()) == {"sram"} and "w" in node["sram"]:
+                return conv_node(node)
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return node
+
+    return walk(params)
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def _bn_init(c):
+    return {"sram": {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,)),
+                     "mean": jnp.zeros((c,)), "var": jnp.ones((c,))}}
+
+
+def _bn_apply(p, x, train: bool = False):
+    # inference-style BN (frozen statistics; YOLoC deploys inference chips)
+    s = p["sram"]
+    inv = jax.lax.rsqrt(s["var"] + 1e-5) * s["scale"]
+    return x * inv + (s["bias"] - s["mean"] * inv)
+
+
+def _leaky(x):
+    return jax.nn.leaky_relu(x, 0.1)
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    num_classes: int = 100
+    input_size: int = 32
+    rebranch: ReBranchSpec = dataclasses.field(default_factory=ReBranchSpec)
+    head_anchors: int = 5            # YOLO heads
+    head_classes: int = 20           # VOC
+
+
+# ---------------------------------------------------------------------------
+# VGG-8  (paper's CIFAR classifier)
+# ---------------------------------------------------------------------------
+
+VGG8_CHANNELS = (64, 64, 128, 128, 256, 256)   # conv layers, pool every 2
+
+
+def init_vgg8(key, cfg: CNNConfig):
+    spec = cfg.rebranch
+    keys = jax.random.split(key, len(VGG8_CHANNELS) + 1)
+    convs, bns = [], []
+    c_in = 3
+    for i, c in enumerate(VGG8_CHANNELS):
+        convs.append(init_conv(keys[i], 3, c_in, c, spec))
+        bns.append(_bn_init(c))
+        c_in = c
+    fc = {"sram": {
+        "w": jax.random.normal(keys[-1],
+                               (c_in * (cfg.input_size // 8) ** 2,
+                                cfg.num_classes)) * 0.01,
+        "b": jnp.zeros((cfg.num_classes,))}}
+    return {"convs": convs, "bns": bns, "fc": fc}
+
+
+def apply_vgg8(params, x, cfg: CNNConfig):
+    spec = cfg.rebranch
+    for i, (conv, bn) in enumerate(zip(params["convs"], params["bns"])):
+        x = jax.nn.relu(_bn_apply(bn, apply_conv(conv, x, spec)))
+        if i % 2 == 1:
+            x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                      (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    x = x.reshape(x.shape[0], -1)
+    return x @ params["fc"]["sram"]["w"] + params["fc"]["sram"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# ResNet-18 (CIFAR variant)
+# ---------------------------------------------------------------------------
+
+RESNET18_STAGES = ((64, 2, 1), (128, 2, 2), (256, 2, 2), (512, 2, 2))
+
+
+def init_resnet18(key, cfg: CNNConfig):
+    spec = cfg.rebranch
+    key, k0 = jax.random.split(key)
+    params = {"stem": init_conv(k0, 3, 3, 64, spec),
+              "stem_bn": _bn_init(64), "stages": []}
+    c_in = 64
+    for c_out, blocks, stride in RESNET18_STAGES:
+        stage = []
+        for b in range(blocks):
+            key, k1, k2, k3 = jax.random.split(key, 4)
+            st = stride if b == 0 else 1
+            blk = {
+                "conv1": init_conv(k1, 3, c_in, c_out, spec),
+                "bn1": _bn_init(c_out),
+                "conv2": init_conv(k2, 3, c_out, c_out, spec),
+                "bn2": _bn_init(c_out),
+            }
+            if st != 1 or c_in != c_out:
+                blk["proj"] = init_conv(k3, 1, c_in, c_out, spec)
+                blk["proj_bn"] = _bn_init(c_out)
+            stage.append(blk)
+            c_in = c_out
+        params["stages"].append(stage)
+    key, kf = jax.random.split(key)
+    params["fc"] = {"sram": {
+        "w": jax.random.normal(kf, (512, cfg.num_classes)) * 0.01,
+        "b": jnp.zeros((cfg.num_classes,))}}
+    return params
+
+
+def apply_resnet18(params, x, cfg: CNNConfig):
+    spec = cfg.rebranch
+    x = jax.nn.relu(_bn_apply(params["stem_bn"],
+                              apply_conv(params["stem"], x, spec)))
+    for stage, (_, _, stride) in zip(params["stages"], RESNET18_STAGES):
+        for b, blk in enumerate(stage):
+            st = stride if b == 0 else 1
+            h = jax.nn.relu(_bn_apply(blk["bn1"],
+                                      apply_conv(blk["conv1"], x, spec, st)))
+            h = _bn_apply(blk["bn2"], apply_conv(blk["conv2"], h, spec))
+            sc = x
+            if "proj" in blk:
+                sc = _bn_apply(blk["proj_bn"],
+                               apply_conv(blk["proj"], x, spec, st))
+            x = jax.nn.relu(h + sc)
+    x = jnp.mean(x, axis=(1, 2))
+    return x @ params["fc"]["sram"]["w"] + params["fc"]["sram"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# DarkNet-19 backbone + YOLO head (the paper's headline model), Tiny-YOLO
+# ---------------------------------------------------------------------------
+
+# (channels, kernel) per layer; 'M' = maxpool  — DarkNet-19 (YOLOv2 backbone)
+DARKNET19 = [
+    (32, 3), "M", (64, 3), "M",
+    (128, 3), (64, 1), (128, 3), "M",
+    (256, 3), (128, 1), (256, 3), "M",
+    (512, 3), (256, 1), (512, 3), (256, 1), (512, 3), "M",
+    (1024, 3), (512, 1), (1024, 3), (512, 1), (1024, 3),
+]
+
+TINY_YOLO = [
+    (16, 3), "M", (32, 3), "M", (64, 3), "M", (128, 3), "M",
+    (256, 3), "M", (512, 3), "M", (1024, 3),
+]
+
+
+def _init_darknet(key, plan, cfg: CNNConfig, head_convs):
+    spec = cfg.rebranch
+    convs, bns = [], []
+    c_in = 3
+    for item in plan:
+        if item == "M":
+            continue                      # pools carry no params
+        c, k = item
+        key, k1 = jax.random.split(key)
+        convs.append(init_conv(k1, k, c_in, c, spec))
+        bns.append(_bn_init(c))
+        c_in = c
+    # detection head: conv stack + 1x1 predictor (trainable — "SRAM")
+    head = []
+    for c, k in head_convs:
+        key, k1 = jax.random.split(key)
+        head.append({"conv": init_conv(k1, k, c_in, c, spec), "bn": _bn_init(c)})
+        c_in = c
+    key, k1 = jax.random.split(key)
+    n_out = cfg.head_anchors * (5 + cfg.head_classes)
+    pred = init_conv(k1, 1, c_in, n_out,
+                     dataclasses.replace(spec, enabled=False))
+    return {"convs": convs, "bns": bns, "head": head, "pred": pred}
+
+
+def init_darknet19(key, cfg: CNNConfig):
+    return _init_darknet(key, DARKNET19, cfg,
+                         head_convs=[(1024, 3), (1024, 3)])
+
+
+def init_tiny_yolo(key, cfg: CNNConfig):
+    return _init_darknet(key, TINY_YOLO, cfg, head_convs=[(512, 3)])
+
+
+def apply_darknet(params, x, cfg: CNNConfig):
+    spec = cfg.rebranch
+    plan = DARKNET19 if cfg.name == "darknet19" else TINY_YOLO
+    i = 0
+    for item in plan:
+        if item == "M":
+            x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                      (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        else:
+            x = _leaky(_bn_apply(params["bns"][i],
+                                 apply_conv(params["convs"][i], x, spec)))
+            i += 1
+    for blk in params["head"]:
+        x = _leaky(_bn_apply(blk["bn"], apply_conv(blk["conv"], x, spec)))
+    x = apply_conv(params["pred"], x, dataclasses.replace(spec, enabled=False))
+    b, h, w, _ = x.shape
+    return x.reshape(b, h, w, cfg.head_anchors, 5 + cfg.head_classes)
+
+
+MODEL_REGISTRY = {
+    "vgg8": (init_vgg8, apply_vgg8),
+    "resnet18": (init_resnet18, apply_resnet18),
+    "darknet19": (init_darknet19, apply_darknet),
+    "tiny_yolo": (init_tiny_yolo, apply_darknet),
+}
+
+
+def count_macs_and_params(init_fn, apply_fn, cfg: CNNConfig):
+    """Static MAC/param counts for the energy model (jaxpr-free estimate)."""
+    key = jax.random.PRNGKey(0)
+    params = jax.eval_shape(lambda k: init_fn(k, cfg), key)
+    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params)
+                   if hasattr(l, "shape"))
+    x = jax.ShapeDtypeStruct((1, cfg.input_size, cfg.input_size, 3),
+                             jnp.float32)
+
+    macs = {"n": 0}
+
+    def count(p, xx):
+        return apply_fn(p, xx, cfg)
+
+    # count conv MACs from the jaxpr
+    jaxpr = jax.make_jaxpr(count)(params, x)
+
+    def walk(jpr):
+        for eqn in jpr.eqns:
+            if eqn.primitive.name == "conv_general_dilated":
+                out = eqn.outvars[0].aval.shape
+                wshape = eqn.invars[1].aval.shape
+                macs["n"] += int(np.prod(out)) * int(
+                    np.prod(wshape[:3]))      # H*W*... * (kh*kw*cin)
+            elif eqn.primitive.name in ("dot_general",):
+                a = eqn.invars[0].aval.shape
+                o = eqn.outvars[0].aval.shape
+                macs["n"] += int(np.prod(o)) * int(a[-1])
+            for sub in eqn.params.values():
+                if hasattr(sub, "jaxpr"):
+                    walk(sub.jaxpr)
+    walk(jaxpr.jaxpr)
+    return n_params, macs["n"]

@@ -1,0 +1,86 @@
+"""Architecture configuration for every supported model family."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.core.rebranch import ReBranchSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    vocab_size: int = 32000
+    mlp_type: str = "swiglu"       # swiglu | geglu | gelu
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    mrope: bool = False            # qwen2-vl M-RoPE (3-section rotary)
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # --- MoE ---
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0
+    moe_group_size: int = 1024     # dispatch group (memory/locality knob)
+    moe_capacity_factor: float = 1.25
+    # --- SSM (mamba-1) ---
+    ssm_state: int = 0
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0               # 0 -> ceil(d_model / 16)
+    ssm_norm: bool = False         # falcon-mamba: RMSNorm on dt/B/C
+    # --- hybrid (hymba) ---
+    sliding_window: int = 0        # 0 -> full attention everywhere
+    full_attn_layers: tuple = ()   # layer idxs with global attention
+    # --- multi-codebook audio (musicgen) ---
+    num_codebooks: int = 0
+    # --- frontend stub ---
+    frontend: str = "none"         # none | vision | audio
+    # --- technique ---
+    rebranch: ReBranchSpec = dataclasses.field(default_factory=ReBranchSpec)
+    # --- numerics ---
+    dtype: Any = "bfloat16"
+    remat: bool = True             # per-block activation checkpointing (train)
+    # --- attention chunking (memory-bounded attention) ---
+    attn_chunk: int = 1024
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.num_heads:
+            object.__setattr__(self, "head_dim",
+                               self.d_model // self.num_heads)
+        if self.dt_rank == 0 and self.ssm_state:
+            object.__setattr__(self, "dt_rank", -(-self.d_model // 16))
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def scan_layers(self) -> bool:
+        """Stacked-params lax.scan over layers (compile time O(1) in L).
+        Hybrid archs keep a python loop: per-layer SWA window / cache
+        shapes are heterogeneous."""
+        return self.family != "hybrid"
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic sequence mixing (long_500k eligibility)."""
+        return self.family in ("ssm", "hybrid")
+
+    def uses_full_attention(self, layer_idx: int) -> bool:
+        if self.sliding_window == 0:
+            return True
+        return layer_idx in self.full_attn_layers

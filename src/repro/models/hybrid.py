@@ -1,0 +1,129 @@
+"""Hymba-style hybrid: parallel attention + SSM heads in every layer.
+
+Each block computes attention and a mamba-style SSM on the same
+(normalised) input in parallel; the two paths are per-path RMS-normalised,
+scaled by learnable betas, and averaged (Hymba fusion).  Most layers use
+sliding-window attention; cfg.full_attn_layers get global attention
+(Hymba: first, middle, last).  Meta tokens are elided (noted in DESIGN.md)
+— they add a constant 128-token prefix orthogonal to the CiM technique.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rebranch
+from repro.distributed.sharding import shard
+from repro.models import layers, ssm
+from repro.models.config import ArchConfig
+
+
+def _block_init(key, cfg: ArchConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": layers.init_rmsnorm(cfg.d_model),
+        "attn": layers.init_attention(k1, cfg),
+        "ssm": ssm.init_ssm_block(k2, cfg),
+        "attn_norm": layers.init_rmsnorm(cfg.d_model),
+        "ssm_norm": layers.init_rmsnorm(cfg.d_model),
+        "beta": {"sram": {"w": jnp.ones((2,), jnp.float32)}},
+        "ln2": layers.init_rmsnorm(cfg.d_model),
+        "mlp": layers.init_mlp(k3, cfg),
+    }
+
+
+def _block_apply(params, x, cfg: ArchConfig, layer_idx: int,
+                 cache=None, decode=False):
+    h = layers.apply_rmsnorm(params["ln1"], x, cfg.norm_eps)
+    attn_cache = cache.get("attn") if cache else None
+    ssm_cache = cache.get("ssm") if cache else None
+
+    a_out, new_attn = layers.apply_attention(
+        params["attn"], h, cfg, layer_idx, cache=attn_cache, decode=decode)
+    s_out, new_ssm = ssm.apply_ssm_block(
+        params["ssm"], h, cfg, cache=ssm_cache, decode=decode)
+
+    beta = params["beta"]["sram"]["w"]
+    a_out = layers.apply_rmsnorm(params["attn_norm"], a_out, cfg.norm_eps)
+    s_out = layers.apply_rmsnorm(params["ssm_norm"], s_out, cfg.norm_eps)
+    fused = 0.5 * (beta[0] * a_out.astype(jnp.float32)
+                   + beta[1] * s_out.astype(jnp.float32)).astype(x.dtype)
+    x = x + fused
+
+    h2 = layers.apply_rmsnorm(params["ln2"], x, cfg.norm_eps)
+    x = x + layers.apply_mlp(params["mlp"], h2, cfg)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"attn": new_attn, "ssm": new_ssm}
+    return x, new_cache
+
+
+def init(key, cfg: ArchConfig):
+    keys = jax.random.split(key, cfg.num_layers + 2)
+    return {
+        "embed": layers.init_embedding(keys[0], cfg.vocab_size,
+                                       cfg.d_model, cfg),
+        "layers": [_block_init(keys[i + 1], cfg)
+                   for i in range(cfg.num_layers)],
+        "ln_f": layers.init_rmsnorm(cfg.d_model),
+        "lm_head": rebranch.init_linear(keys[-1], cfg.d_model,
+                                        cfg.vocab_size, cfg.rebranch),
+    }
+
+
+def features(params, batch, cfg: ArchConfig):
+    x = layers.apply_embedding(params["embed"], batch["tokens"], cfg)
+    x = shard(x, "batch", "seq_sp", "embed")
+    for i, block in enumerate(params["layers"]):
+        fn = lambda p, xx, _i=i: _block_apply(p, xx, cfg, _i)[0]
+        if cfg.remat:
+            fn = jax.checkpoint(fn)
+        x = shard(fn(block, x), "batch", "seq_sp", "embed")
+    return x
+
+
+def apply_head(params, x, cfg: ArchConfig):
+    x = layers.apply_rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return rebranch.apply_linear(params["lm_head"], x, cfg.rebranch)
+
+
+def forward(params, batch, cfg: ArchConfig):
+    logits = apply_head(params, features(params, batch, cfg), cfg)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    """SWA layers keep a window-sized linear buffer; full-attn layers keep
+    the whole horizon; SSM state is O(1) — this is what makes long_500k
+    lowerable for the hybrid."""
+    caches = [{
+        "attn": layers.init_attention_cache(cfg, batch, max_len, i, dtype),
+        "ssm": ssm.init_ssm_cache(cfg, batch, dtype),
+    } for i in range(cfg.num_layers)]
+    return {"layers": caches}
+
+
+def prefill(params, batch, cfg: ArchConfig, cache):
+    x = layers.apply_embedding(params["embed"], batch["tokens"], cfg)
+    x = shard(x, "batch", "seq_sp", "embed")
+    new_caches = []
+    for i, block in enumerate(params["layers"]):
+        x, nc = _block_apply(block, x, cfg, i, cache=cache["layers"][i])
+        new_caches.append(nc)
+    x = layers.apply_rmsnorm(params["ln_f"], x[:, -1:], cfg.norm_eps)
+    logits = rebranch.apply_linear(params["lm_head"], x, cfg.rebranch)
+    return logits.astype(jnp.float32), {"layers": new_caches}
+
+
+def decode_step(params, tokens, cfg: ArchConfig, cache):
+    x = layers.apply_embedding(params["embed"], tokens, cfg)
+    new_caches = []
+    for i, block in enumerate(params["layers"]):
+        x, nc = _block_apply(block, x, cfg, i, cache=cache["layers"][i],
+                             decode=True)
+        new_caches.append(nc)
+    x = layers.apply_rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = rebranch.apply_linear(params["lm_head"], x, cfg.rebranch)
+    return logits.astype(jnp.float32), {"layers": new_caches}

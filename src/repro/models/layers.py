@@ -1,0 +1,310 @@
+"""Shared model components (ReBranch-aware, sharding-annotated).
+
+Every large linear map goes through core.rebranch (frozen int8 ROM trunk +
+trainable branch); norms, biases and routers are small and stay trainable
+("SRAM").  Embedding tables are ROM (int8 + scale) — lookups dequantise.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant, rebranch
+from repro.distributed.sharding import shard
+from repro.models.config import ArchConfig
+
+
+def _dt(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int):
+    return {"sram": {"scale": jnp.ones((d,), jnp.float32)}}
+
+
+def apply_rmsnorm(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["sram"]["scale"]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings (ROM: int8 table + scale)
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d: int, cfg: ArchConfig):
+    table = jax.random.normal(key, (vocab, d), jnp.float32)
+    t_q, t_scale = quant.quantize_weights(table, axis=1)   # per-token scale
+    return {"rom": {"table_q": t_q, "table_scale": t_scale}}
+
+
+def apply_embedding(params, ids, cfg: ArchConfig):
+    t_q = params["rom"]["table_q"]
+    t_s = params["rom"]["table_scale"]
+    emb = t_q[ids].astype(_dt(cfg)) * t_s[ids].astype(_dt(cfg))
+    return emb
+
+
+def embedding_as_logits(params, x, cfg: ArchConfig):
+    """Tied-embedding readout: x @ dequant(table)^T."""
+    t_q = params["rom"]["table_q"]
+    t_s = params["rom"]["table_scale"]
+    w = t_q.astype(x.dtype) * t_s.astype(x.dtype)          # [V, d]
+    return jnp.einsum("...d,vd->...v", x, w)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (RoPE and qwen2-vl M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10_000.0, mrope: bool = False):
+    """x: [B, S, H, Dh]; positions: [B, S] (or [B, S, 3] for M-RoPE).
+
+    M-RoPE (qwen2-vl): the rotary dimensions are split into 3 sections
+    (temporal / height / width) fed by 3 position streams.  For text-only
+    streams all three positions coincide and M-RoPE == RoPE.
+    """
+    dh = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(dh, theta), jnp.float32)  # [dh/2]
+    if mrope:
+        if positions.ndim == 2:                      # text-only degenerate
+            positions = jnp.broadcast_to(positions[..., None],
+                                         (*positions.shape, 3))
+        n = dh // 2
+        # section split 2:1:1 over rotary dims (t, h, w)
+        sec = np.array([n - 2 * (n // 4), n // 4, n // 4])
+        sel = np.repeat(np.arange(3), sec)           # [dh/2] -> section id
+        pos = jnp.take_along_axis(
+            positions.astype(jnp.float32),
+            jnp.broadcast_to(jnp.asarray(sel)[None, None, :],
+                             (*positions.shape[:2], n)).astype(jnp.int32),
+            axis=-1)                                  # [B, S, dh/2]
+        angles = pos * freqs[None, None, :]
+    else:
+        angles = positions.astype(jnp.float32)[..., None] * freqs
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA + KV cache + chunked causal / sliding window)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 4)
+    spec = cfg.rebranch
+    h, kv, dh, d = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.d_model
+    return {
+        "q": rebranch.init_linear(ks[0], d, h * dh, spec, use_bias=cfg.qkv_bias),
+        "k": rebranch.init_linear(ks[1], d, kv * dh, spec, use_bias=cfg.qkv_bias),
+        "v": rebranch.init_linear(ks[2], d, kv * dh, spec, use_bias=cfg.qkv_bias),
+        "o": rebranch.init_linear(ks[3], h * dh, d, spec),
+    }
+
+
+def _chunked_causal_attention(q, k, v, chunk: int, window: int = 0,
+                              kv_offset: int = 0):
+    """Memory-bounded causal attention via online softmax over KV chunks.
+
+    q: [B, Sq, H, Dh], k/v: [B, Skv, KV, Dh].  O(Sq * chunk) live memory
+    instead of O(Sq * Skv) — required for the 32k prefill shapes.
+    window > 0 restricts to a sliding window (hymba SWA layers).
+    """
+    b, sq, h, dh = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    rep = h // kvh
+    scale = 1.0 / np.sqrt(dh)
+    q = q.astype(jnp.float32) * scale
+    qpos = kv_offset + jnp.arange(sq)
+
+    n_chunks = -(-skv // chunk)
+    pad = n_chunks * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, chunk, kvh, dh).astype(jnp.float32)
+    vc = v.reshape(b, n_chunks, chunk, kvh, dh).astype(jnp.float32)
+    kc = jnp.moveaxis(kc, 1, 0)       # [C, B, chunk, KV, Dh]
+    vc = jnp.moveaxis(vc, 1, 0)
+
+    def step(carry, inputs):
+        m, l, acc = carry              # [B,H,Sq], [B,H,Sq], [B,H,Sq,Dh]
+        kblk, vblk, cidx = inputs
+        kpos = cidx * chunk + jnp.arange(chunk)
+        # scores: [B, H, Sq, chunk] (q heads grouped onto kv heads)
+        qg = q.reshape(b, sq, kvh, rep, dh)
+        s = jnp.einsum("bsgrd,bcgd->bgrsc", qg, kblk)
+        s = s.reshape(b, kvh * rep, sq, chunk)
+        mask = kpos[None, :] <= qpos[:, None]                  # causal
+        mask &= kpos[None, :] < skv                            # padding
+        if window:
+            mask &= kpos[None, :] > (qpos[:, None] - window)
+        s = jnp.where(mask[None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bgrsc,bcgd->bgrsd",
+                        p.reshape(b, kvh, rep, sq, chunk), vblk)
+        acc_new = acc * corr[..., None] + pv.reshape(b, kvh * rep, sq, dh)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, dh), jnp.float32)
+    # flash-attention-style backward: recompute scores/probs per chunk in
+    # the bwd pass instead of stacking per-step residuals across the scan
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(step), (m0, l0, a0), (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 1, 2)     # [B, Sq, H, Dh]
+
+
+def _decode_attention(q, k_cache, v_cache, valid_count):
+    """Single-position attention against a (possibly ring-buffer) cache.
+
+    q: [B, 1, H, Dh].  Attention over a *set* of cached entries is order-
+    invariant (RoPE already encodes absolute positions), so ring-buffer
+    eviction needs no re-ordering — just a validity mask.
+    """
+    b, _, h, dh = q.shape
+    s_max, kvh = k_cache.shape[1], k_cache.shape[2]
+    rep = h // kvh
+    scale = 1.0 / np.sqrt(dh)
+    s = jnp.einsum("bgrd,bcgd->bgrc",
+                   (q.astype(jnp.float32) * scale)[:, 0].reshape(b, kvh, rep, dh),
+                   k_cache.astype(jnp.float32))       # [B, KV, rep, S]
+    pos = jnp.arange(s_max)
+    mask = pos[None, :] < valid_count[:, None]        # [B, S]
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrc,bcgd->bgrd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, dh)
+
+
+def apply_attention(params, x, cfg: ArchConfig, layer_idx: int,
+                    positions=None, cache=None, decode: bool = False):
+    """Returns (out, new_cache_entry)."""
+    spec = cfg.rebranch
+    b, s, d = x.shape
+    h, kv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    window = 0 if cfg.uses_full_attention(layer_idx) else cfg.sliding_window
+
+    # NOTE: no explicit q/k/v constraints — GSPMD propagates the projection
+    # output sharding through the reshape; forcing head sharding here causes
+    # involuntary remat when heads don't divide the model axis (gemma, yi).
+    q = rebranch.apply_linear(params["q"], x, spec).reshape(b, s, h, dh)
+    k = rebranch.apply_linear(params["k"], x, spec).reshape(b, s, kv, dh)
+    v = rebranch.apply_linear(params["v"], x, spec).reshape(b, s, kv, dh)
+
+    if positions is None:
+        if decode and cache is not None:
+            positions = cache["length"][:, None]              # [B, 1]
+        else:
+            positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope)
+
+    if decode:
+        assert cache is not None and s == 1
+        length = cache["length"]                               # [B]
+        s_max = cache["k"].shape[1]
+        slot = length[0] % s_max          # ring buffer for SWA layers
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        valid = jnp.minimum(length + 1, s_max)
+        out = _decode_attention(q, k_cache, v_cache, valid)
+        new_cache = {"k": k_cache, "v": v_cache, "length": length + 1}
+    else:
+        out = _chunked_causal_attention(q, k, v, cfg.attn_chunk, window)
+        if cache is not None:        # prefill: write the cache
+            s_max = cache["k"].shape[1]
+            if s >= s_max:
+                # SWA ring: keep the window tail, laid out so that token t
+                # sits at slot t % s_max (decode continues the ring).
+                k_w = jnp.roll(k[:, -s_max:], s % s_max, axis=1)
+                v_w = jnp.roll(v[:, -s_max:], s % s_max, axis=1)
+            else:
+                k_w, v_w = k, v
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k_w.astype(cache["k"].dtype), 0, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v_w.astype(cache["v"].dtype), 0, axis=1)
+            new_cache = {"k": k_cache, "v": v_cache,
+                         "length": cache["length"] + s}
+        else:
+            new_cache = None
+
+    out = out.astype(x.dtype).reshape(b, s, h * dh)
+    out = rebranch.apply_linear(params["o"], out, spec,
+                                t1_axes=("batch", "seq", "mlp"),
+                                out_axes=("batch", "seq_sp", None))
+    # seq_sp BEFORE the residual add: converts the row-parallel partial-sum
+    # all-reduce into a reduce-scatter (16x less wire on a 16-way axis)
+    return shard(out, "batch", "seq_sp", None), new_cache
+
+
+def init_attention_cache(cfg: ArchConfig, batch: int, max_len: int,
+                         layer_idx: int, dtype=jnp.bfloat16):
+    """SWA layers get a ring buffer of window size; full-attention layers
+    keep the whole horizon."""
+    window = (0 if cfg.uses_full_attention(layer_idx)
+              else cfg.sliding_window)
+    s = max_len if window == 0 else min(max_len, window)
+    return {
+        "k": jnp.zeros((batch, s, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, s, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU / GELU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ArchConfig, d_ff: int | None = None):
+    spec = cfg.rebranch
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        return {
+            "gate": rebranch.init_linear(ks[0], d, ff, spec),
+            "up": rebranch.init_linear(ks[1], d, ff, spec),
+            "down": rebranch.init_linear(ks[2], ff, d, spec),
+        }
+    return {
+        "up": rebranch.init_linear(ks[1], d, ff, spec),
+        "down": rebranch.init_linear(ks[2], ff, d, spec),
+    }
+
+
+def apply_mlp(params, x, cfg: ArchConfig):
+    spec = cfg.rebranch
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        g = rebranch.apply_linear(params["gate"], x, spec)
+        u = rebranch.apply_linear(params["up"], x, spec)
+        act = jax.nn.silu(g) if cfg.mlp_type == "swiglu" else jax.nn.gelu(g)
+        h = act * u
+    else:
+        h = jax.nn.gelu(rebranch.apply_linear(params["up"], x, spec))
+    h = shard(h, "batch", "seq", "mlp")
+    return rebranch.apply_linear(params["down"], h, spec,
+                                 t1_axes=("batch", "seq", "mlp"),
+                                 out_axes=("batch", "seq_sp", None))

@@ -1,0 +1,302 @@
+"""Mamba-1 selective SSM (falcon-mamba-7b) with ReBranch projections.
+
+The large linear maps (in_proj, x_proj, dt_proj, out_proj) are ReBranch
+layers (frozen int8 ROM trunk + trainable branch).  The recurrence itself
+is element-wise — not a CiM operation — and its small parameters
+(A_log, D, conv kernel, norms) stay trainable ("SRAM").
+
+Scan: chunked parallel scan — jax.lax.scan over sequence chunks carrying
+the SSM state, associative scan within a chunk.  Memory is O(B * chunk *
+d_inner * d_state) instead of O(B * S * d_inner * d_state), which is what
+makes the 500k-token cells lowerable.
+
+falcon-mamba deviation from mamba-1: RMSNorm applied to dt/B/C streams
+(cfg.ssm_norm).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rebranch
+from repro.distributed.sharding import shard
+from repro.models import layers
+from repro.models.config import ArchConfig
+
+
+def init_ssm_block(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 6)
+    spec = cfg.rebranch
+    d, di, n, dtr = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    # S4D-real initialisation for A
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None], (di, 1))
+    p = {
+        "in_proj": rebranch.init_linear(ks[0], d, 2 * di, spec),
+        "conv": {"sram": {
+            "w": jax.random.normal(ks[1], (cfg.d_conv, di), jnp.float32)
+                 / np.sqrt(cfg.d_conv),
+            "b": jnp.zeros((di,), jnp.float32)}},
+        "x_proj": rebranch.init_linear(ks[2], di, dtr + 2 * n, spec),
+        "dt_proj": rebranch.init_linear(ks[3], dtr, di, spec, use_bias=True),
+        "A_log": {"sram": {"w": jnp.log(a)}},
+        "D": {"sram": {"w": jnp.ones((di,), jnp.float32)}},
+        "out_proj": rebranch.init_linear(ks[4], di, d, spec),
+    }
+    # dt bias init so softplus(dt) starts in [1e-3, 1e-1]
+    dt_init = jnp.exp(jax.random.uniform(ks[5], (di,)) *
+                      (np.log(0.1) - np.log(1e-3)) + np.log(1e-3))
+    p["dt_proj"]["sram"]["b"] = dt_init + jnp.log(
+        -jnp.expm1(-dt_init))            # inverse softplus
+    if cfg.ssm_norm:
+        p["dt_norm"] = layers.init_rmsnorm(dtr)
+        p["b_norm"] = layers.init_rmsnorm(n)
+        p["c_norm"] = layers.init_rmsnorm(n)
+    return p
+
+
+def _ssm_scan_chunked(u, dt, a, b, c, d_skip, chunk: int, h0=None):
+    """Selective scan  h' = exp(dt*A) h + dt*B u ;  y = C h + D u.
+
+    u/dt: [B, S, di];  b/c: [B, S, N];  a: [di, N].
+    Chunked: sequential lax.scan over S/chunk carrying h, associative scan
+    inside each chunk.  Returns (y [B,S,di], h_final [B,di,N]).
+    """
+    bsz, s, di = u.shape
+    n = a.shape[1]
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+
+    # decay and input terms
+    # da: [B, S, di, N] = exp(dt * A)   (A negative real)
+    def chunk_fn(h, inp):
+        u_c, dt_c, b_c, c_c = inp                      # [B, chunk, ...]
+        da = jnp.exp(dt_c[..., None] * a[None, None])  # [B,ch,di,N]
+        dbu = (dt_c * u_c)[..., None] * b_c[:, :, None, :]
+
+        def assoc(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, br + ar * bl
+
+        a_acc, b_acc = jax.lax.associative_scan(assoc, (da, dbu), axis=1)
+        h_all = a_acc * h[:, None] + b_acc             # [B,ch,di,N]
+        y_c = jnp.einsum("bsdn,bsn->bsd", h_all, c_c)
+        return h_all[:, -1], y_c
+
+    u_ch = u.reshape(bsz, n_chunks, chunk, di).swapaxes(0, 1)
+    dt_ch = dt.reshape(bsz, n_chunks, chunk, di).swapaxes(0, 1)
+    b_ch = b.reshape(bsz, n_chunks, chunk, n).swapaxes(0, 1)
+    c_ch = c.reshape(bsz, n_chunks, chunk, n).swapaxes(0, 1)
+
+    h_init = (jnp.zeros((bsz, di, n), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+    h_last, y = jax.lax.scan(jax.checkpoint(chunk_fn), h_init,
+                             (u_ch, dt_ch, b_ch, c_ch))
+    y = y.swapaxes(0, 1).reshape(bsz, n_chunks * chunk, di)[:, :s]
+    return y + u[:, :s] * d_skip[None, None], h_last
+
+
+def _compute_ssm_inputs(params, x_conv, cfg: ArchConfig):
+    spec = cfg.rebranch
+    di, n, dtr = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    xdbc = rebranch.apply_linear(params["x_proj"], x_conv, spec)
+    dt_r, b, c = jnp.split(xdbc, [dtr, dtr + n], axis=-1)
+    if cfg.ssm_norm:                       # falcon-mamba
+        dt_r = layers.apply_rmsnorm(params["dt_norm"], dt_r, cfg.norm_eps)
+        b = layers.apply_rmsnorm(params["b_norm"], b, cfg.norm_eps)
+        c = layers.apply_rmsnorm(params["c_norm"], c, cfg.norm_eps)
+    dt = jax.nn.softplus(
+        rebranch.apply_linear(params["dt_proj"], dt_r, spec).astype(jnp.float32))
+    a = -jnp.exp(params["A_log"]["sram"]["w"])
+    return dt, a, b.astype(jnp.float32), c.astype(jnp.float32)
+
+
+def apply_ssm_block(params, x, cfg: ArchConfig, cache=None, decode=False):
+    """Returns (out, new_cache).  cache = {conv [B,K-1,di], h [B,di,N]}."""
+    spec = cfg.rebranch
+    bsz, s, _ = x.shape
+    di = cfg.d_inner
+    xz = rebranch.apply_linear(params["in_proj"], x, spec)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = shard(xi, "batch", "seq", "ssm_inner")
+
+    conv_w = params["conv"]["sram"]["w"]                 # [K, di]
+    conv_b = params["conv"]["sram"]["b"]
+    k = conv_w.shape[0]
+
+    if decode:
+        assert cache is not None and s == 1
+        hist = jnp.concatenate([cache["conv"], xi], axis=1)   # [B,K,di]
+        x_conv = jnp.einsum("bkd,kd->bd", hist.astype(jnp.float32),
+                            conv_w)[:, None] + conv_b
+        x_conv = jax.nn.silu(x_conv).astype(x.dtype)
+        dt, a, b, c = _compute_ssm_inputs(params, x_conv, cfg)
+        h = cache["h"].astype(jnp.float32)
+        da = jnp.exp(dt[:, 0, :, None] * a[None])             # [B,di,N]
+        dbu = (dt[:, 0] * x_conv.astype(jnp.float32)[:, 0])[..., None] \
+            * b[:, 0, None, :]
+        h_new = da * h + dbu
+        y = jnp.einsum("bdn,bn->bd", h_new, c[:, 0])[:, None]
+        y = y + x_conv.astype(jnp.float32) * params["D"]["sram"]["w"]
+        new_cache = {"conv": hist[:, 1:], "h": h_new}
+    else:
+        # causal depthwise conv over the sequence
+        if cache is not None and "conv" in cache:
+            xpad = jnp.concatenate([cache["conv"], xi], axis=1)
+        else:
+            xpad = jnp.pad(xi, ((0, 0), (k - 1, 0), (0, 0)))
+        x_conv = sum(
+            xpad[:, i:i + s].astype(jnp.float32) * conv_w[i]
+            for i in range(k)) + conv_b
+        x_conv = jax.nn.silu(x_conv).astype(x.dtype)
+        dt, a, b, c = _compute_ssm_inputs(params, x_conv, cfg)
+        h0 = cache["h"] if (cache is not None and "h" in cache) else None
+        y, h_last = _ssm_scan_chunked(
+            x_conv.astype(jnp.float32), dt, a, b, c,
+            params["D"]["sram"]["w"], chunk=min(cfg.attn_chunk, s), h0=h0)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"conv": xpad[:, -(k - 1):] if k > 1 else
+                         xpad[:, :0], "h": h_last}
+
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    y = rebranch.apply_linear(params["out_proj"], y, spec,
+                              t1_axes=("batch", "seq", "mlp"),
+                              out_axes=("batch", "seq_sp", None))
+    return shard(y, "batch", "seq_sp", None), new_cache
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16):
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# full model (mamba backbone: norm -> ssm -> residual)
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, cfg: ArchConfig):
+    return {
+        "ln": layers.init_rmsnorm(cfg.d_model),
+        "ssm": init_ssm_block(key, cfg),
+    }
+
+
+def init(key, cfg: ArchConfig):
+    keys = jax.random.split(key, cfg.num_layers + 2)
+    if cfg.scan_layers:
+        blocks = jax.vmap(lambda k: _layer_init(k, cfg))(
+            jnp.stack(keys[1:cfg.num_layers + 1]))
+    else:
+        blocks = [_layer_init(keys[i + 1], cfg)
+                  for i in range(cfg.num_layers)]
+    return {
+        "embed": layers.init_embedding(keys[0], cfg.vocab_size,
+                                       cfg.d_model, cfg),
+        "layers": blocks,
+        "ln_f": layers.init_rmsnorm(cfg.d_model),
+        "lm_head": rebranch.init_linear(keys[-1], cfg.d_model,
+                                        cfg.vocab_size, cfg.rebranch),
+    }
+
+
+def features(params, batch, cfg: ArchConfig):
+    x = layers.apply_embedding(params["embed"], batch["tokens"], cfg)
+    x = shard(x, "batch", "seq_sp", "embed")
+
+    def fn(blk, xx):
+        h, _ = apply_ssm_block(
+            blk["ssm"],
+            layers.apply_rmsnorm(blk["ln"], xx, cfg.norm_eps), cfg)
+        return xx + h
+
+    if cfg.scan_layers:
+        body = lambda xx, blk: (
+            shard(fn(blk, xx), "batch", "seq_sp", "embed"), None)
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        return x
+    fn2 = jax.checkpoint(fn) if cfg.remat else fn
+    for block in params["layers"]:
+        x = shard(fn2(block, x), "batch", "seq_sp", "embed")
+    return x
+
+
+def apply_head(params, x, cfg: ArchConfig):
+    x = layers.apply_rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return rebranch.apply_linear(params["lm_head"], x, cfg.rebranch)
+
+
+def forward(params, batch, cfg: ArchConfig):
+    logits = apply_head(params, features(params, batch, cfg), cfg)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    del max_len                            # O(1) state — the SSM advantage
+    if cfg.scan_layers:
+        one = init_ssm_cache(cfg, batch, dtype)
+        return {"layers": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.num_layers, *a.shape)), one)}
+    return {"layers": [init_ssm_cache(cfg, batch, dtype)
+                       for _ in range(cfg.num_layers)]}
+
+
+def prefill(params, batch, cfg: ArchConfig, cache):
+    x = layers.apply_embedding(params["embed"], batch["tokens"], cfg)
+    x = shard(x, "batch", "seq_sp", "embed")
+
+    def fn(blk, xx, lc):
+        h, nc = apply_ssm_block(
+            blk["ssm"],
+            layers.apply_rmsnorm(blk["ln"], xx, cfg.norm_eps),
+            cfg, cache=lc)
+        return xx + h, nc
+
+    if cfg.scan_layers:
+        body = lambda xx, inp: fn(inp[0], xx, inp[1])
+        x, new_caches = jax.lax.scan(body, x,
+                                     (params["layers"], cache["layers"]))
+    else:
+        new_caches = []
+        for block, lc in zip(params["layers"], cache["layers"]):
+            x, nc = fn(block, x, lc)
+            new_caches.append(nc)
+    x = layers.apply_rmsnorm(params["ln_f"], x[:, -1:], cfg.norm_eps)
+    logits = rebranch.apply_linear(params["lm_head"], x, cfg.rebranch)
+    return logits.astype(jnp.float32), {"layers": new_caches}
+
+
+def decode_step(params, tokens, cfg: ArchConfig, cache):
+    x = layers.apply_embedding(params["embed"], tokens, cfg)
+
+    def fn(blk, xx, lc):
+        h, nc = apply_ssm_block(
+            blk["ssm"],
+            layers.apply_rmsnorm(blk["ln"], xx, cfg.norm_eps),
+            cfg, cache=lc, decode=True)
+        return xx + h, nc
+
+    if cfg.scan_layers:
+        body = lambda xx, inp: fn(inp[0], xx, inp[1])
+        x, new_caches = jax.lax.scan(body, x,
+                                     (params["layers"], cache["layers"]))
+    else:
+        new_caches = []
+        for block, lc in zip(params["layers"], cache["layers"]):
+            x, nc = fn(block, x, lc)
+            new_caches.append(nc)
+    x = layers.apply_rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = rebranch.apply_linear(params["lm_head"], x, cfg.rebranch)
+    return logits.astype(jnp.float32), {"layers": new_caches}

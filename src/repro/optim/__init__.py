@@ -1,0 +1,5 @@
+from repro.optim.adamw import AdamWConfig, init, update, global_norm
+from repro.optim import schedule, compress
+
+__all__ = ["AdamWConfig", "init", "update", "global_norm", "schedule",
+           "compress"]

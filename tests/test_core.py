@@ -1,0 +1,257 @@
+"""Unit tests for core: quantization, CiM model, ReBranch, ROM utilities."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cim, quant, rebranch, rom
+
+jax.config.update("jax_enable_x64", False)
+
+
+# ---------------------------------------------------------------------------
+# quant
+# ---------------------------------------------------------------------------
+
+class TestQuant:
+    def test_weight_roundtrip_error_bounded(self):
+        key = jax.random.PRNGKey(0)
+        w = jax.random.normal(key, (64, 32))
+        w_q, s = quant.quantize_weights(w, axis=0)
+        err = jnp.abs(quant.dequantize(w_q, s) - w)
+        # max error <= half an LSB per channel
+        assert float(jnp.max(err / s)) <= 0.5 + 1e-3
+
+    def test_activation_quant_shapes(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 7, 16))
+        x_q, s = quant.quantize_activations(x)
+        assert x_q.shape == x.shape and x_q.dtype == jnp.int8
+        assert s.shape == (4, 7, 1)
+
+    def test_fake_quant_gradient_is_straight_through(self):
+        x = jnp.array([0.3, -1.2, 2.5])
+        g = jax.grad(lambda v: jnp.sum(quant.fake_quant_ste(v) ** 2))(x)
+        # STE: d/dx sum(fq(x)^2) ~= 2*fq(x)
+        np.testing.assert_allclose(np.asarray(g),
+                                   2 * np.asarray(quant.fake_quant_ste(x)),
+                                   rtol=1e-5)
+
+    def test_int8_matmul_matches_float(self):
+        key = jax.random.PRNGKey(2)
+        a = jax.random.randint(key, (8, 16), -127, 128, jnp.int8)
+        b = jax.random.randint(key, (16, 4), -127, 128, jnp.int8)
+        out = quant.int8_matmul(a, b)
+        ref = np.asarray(a, np.int64) @ np.asarray(b, np.int64)
+        np.testing.assert_array_equal(np.asarray(out, np.int64), ref)
+
+
+# ---------------------------------------------------------------------------
+# CiM macro model
+# ---------------------------------------------------------------------------
+
+class TestCiM:
+    def _rand_int8(self, key, shape):
+        return jax.random.randint(key, shape, -127, 128).astype(jnp.int8)
+
+    def test_ideal_mode_exact(self):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+        a = self._rand_int8(k1, (4, 256))
+        w = self._rand_int8(k2, (256, 8))
+        cfg = cim.CiMConfig(mode="ideal")
+        out = cim.cim_matmul_model(a, w, cfg)
+        ref = np.asarray(a, np.int64) @ np.asarray(w, np.int64)
+        np.testing.assert_array_equal(np.asarray(out, np.int64), ref)
+
+    @pytest.mark.parametrize("mode", ["per_subarray", "bitserial"])
+    @pytest.mark.parametrize("k", [128, 256, 100, 300])
+    def test_nonideal_close_to_exact(self, mode, k):
+        """5-bit ADC noise on realistic activations stays small relative to
+        the output scale (the paper reports <0.4% accuracy loss)."""
+        k1, k2 = jax.random.split(jax.random.PRNGKey(42))
+        # realistic: activations concentrated, not full-scale
+        a = jnp.clip(jnp.round(jax.random.normal(k1, (8, k)) * 20), -127, 127
+                     ).astype(jnp.int8)
+        w = jnp.clip(jnp.round(jax.random.normal(k2, (k, 16)) * 30), -127, 127
+                     ).astype(jnp.int8)
+        cfg = cim.CiMConfig(mode=mode)
+        out = np.asarray(cim.cim_matmul_model(a, w, cfg))
+        ref = np.asarray(a, np.float64) @ np.asarray(w, np.float64)
+        scale = np.std(ref) + 1e-6
+        rel = np.abs(out - ref) / scale
+        assert np.mean(rel) < 0.25, f"mode={mode} k={k} mean rel err {np.mean(rel)}"
+
+    def test_bitserial_exact_with_infinite_adc(self):
+        """With enough ADC bits the bit-serial decomposition is EXACT —
+        validates the offset-binary algebra and correction terms."""
+        k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+        a = self._rand_int8(k1, (4, 200))       # non-multiple of 128: padding
+        w = self._rand_int8(k2, (200, 8))
+        cfg = cim.CiMConfig(mode="bitserial", adc_bits=20, adc_range_frac=1.0)
+        out = np.asarray(cim.cim_matmul_model(a, w, cfg))
+        ref = np.asarray(a, np.float64) @ np.asarray(w, np.float64)
+        # outputs are O(1e5); residual error is f32 rounding of the 20-bit
+        # ADC lsb, not a modelling error
+        np.testing.assert_allclose(out, ref, atol=2.0)
+
+    def test_per_subarray_exact_with_infinite_adc(self):
+        """Within the engineered analogue range (psums from realistic,
+        concentrated distributions) an infinite-resolution ADC makes the
+        per-subarray model exact up to f32 rounding."""
+        k1, k2 = jax.random.split(jax.random.PRNGKey(8))
+        a = jnp.clip(jnp.round(jax.random.normal(k1, (4, 384)) * 20),
+                     -127, 127).astype(jnp.int8)
+        w = jnp.clip(jnp.round(jax.random.normal(k2, (384, 8)) * 30),
+                     -127, 127).astype(jnp.int8)
+        cfg = cim.CiMConfig(mode="per_subarray", adc_bits=24,
+                            psum_range_frac=1.25)   # engineering margin
+        out = np.asarray(cim.cim_matmul_model(a, w, cfg))
+        ref = np.asarray(a, np.float64) @ np.asarray(w, np.float64)
+        # f32 rounding at 24-bit ADC granularity, not a modelling error
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=2.0)
+
+    def test_adc_transfer_levels(self):
+        cfg = cim.CiMConfig(adc_bits=5)
+        x = jnp.linspace(0.0, 384.0, 1000)
+        y = np.asarray(cim.adc_transfer(x, 384.0, cfg))
+        assert len(np.unique(y)) <= 32  # 5-bit
+        assert y.min() >= 0 and y.max() <= 384.0
+
+    def test_macro_count(self):
+        # one 128x256 macro holds 32768 cells = 4096 8-bit weights
+        assert cim.macro_count(4096) == 1
+        assert cim.macro_count(4097) == 2
+
+    @settings(max_examples=20, deadline=None)
+    @given(m=st.integers(1, 5), k=st.integers(1, 300), n=st.integers(1, 24))
+    def test_property_ideal_equals_int_matmul(self, m, k, n):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(m * 1000 + k * 10 + n))
+        a = self._rand_int8(k1, (m, k))
+        w = self._rand_int8(k2, (k, n))
+        out = cim.cim_matmul_model(a, w, cim.CiMConfig(mode="ideal"))
+        ref = np.asarray(a, np.int64) @ np.asarray(w, np.int64)
+        np.testing.assert_array_equal(np.asarray(out, np.int64), ref)
+
+
+# ---------------------------------------------------------------------------
+# ReBranch
+# ---------------------------------------------------------------------------
+
+SPEC = rebranch.ReBranchSpec()
+
+
+class TestReBranch:
+    def test_partition_combine_roundtrip(self):
+        p = rebranch.init_linear(jax.random.PRNGKey(0), 32, 16, SPEC)
+        t, f = rebranch.partition(p)
+        assert t["rom"]["w_q"] is None and f["rom"]["w_q"] is not None
+        assert t["sram"]["core"] is not None and f["sram"]["core"] is None
+        merged = rebranch.combine(t, f)
+        assert jax.tree.structure(merged) == jax.tree.structure(p)
+        for a, b in zip(jax.tree.leaves(merged), jax.tree.leaves(p)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_fresh_branch_is_identity_of_trunk(self):
+        """core=0 => output equals the quantised trunk alone."""
+        p = rebranch.init_linear(jax.random.PRNGKey(0), 64, 32, SPEC)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 64))
+        y = rebranch.apply_linear(p, x, SPEC)
+        w_deq = (p["rom"]["w_q"].astype(jnp.float32)
+                 * p["rom"]["w_scale"].astype(jnp.float32))
+        ref = np.asarray(quant.fake_quant_ste(x)) @ np.asarray(w_deq)
+        np.testing.assert_allclose(np.asarray(y), ref, rtol=0.03, atol=0.05)
+
+    def test_branch_param_budget_is_1_over_16(self):
+        p = rebranch.init_linear(jax.random.PRNGKey(0), 256, 256, SPEC)
+        trunk = p["rom"]["w_q"].size
+        core = p["sram"]["core"].size
+        assert core * 16 == trunk
+
+    def test_gradients_only_flow_to_sram(self):
+        p = rebranch.init_linear(jax.random.PRNGKey(0), 32, 16, SPEC)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 32))
+        t, f = rebranch.partition(p)
+
+        def loss(t):
+            y = rebranch.apply_linear(rebranch.combine(t, f), x, SPEC)
+            return jnp.sum(y ** 2)
+
+        g = jax.grad(loss)(t)
+        assert float(jnp.sum(jnp.abs(g["sram"]["core"]))) > 0
+
+    def test_trunk_matmul_backward_is_ste(self):
+        """dx through the frozen int8 trunk equals g @ dequant(w)^T."""
+        key = jax.random.PRNGKey(3)
+        p = rebranch.init_linear(key, 48, 24, SPEC)
+        x = jax.random.normal(jax.random.PRNGKey(4), (2, 48))
+        cfg = SPEC.cim
+
+        def f(x):
+            return jnp.sum(rebranch.trunk_matmul(
+                cfg, None, x, p["rom"]["w_q"], p["rom"]["w_scale"]))
+
+        dx = jax.grad(f)(x)
+        w_deq = np.asarray(p["rom"]["w_q"], np.float32) * np.asarray(
+            p["rom"]["w_scale"], np.float32)
+        ref = np.ones((2, 24), np.float32) @ w_deq.T
+        np.testing.assert_allclose(np.asarray(dx), ref, rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("impl", ["int8_native", "dequant"])
+    def test_trunk_impls_agree(self, impl):
+        import dataclasses as dc
+        spec = dc.replace(SPEC, trunk_impl=impl)
+        p = rebranch.init_linear(jax.random.PRNGKey(0), 64, 32, spec)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 64))
+        y = rebranch.apply_linear(p, x, spec)
+        ref = rebranch.apply_linear(p, x, SPEC)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                                   rtol=0.02, atol=0.02)
+
+    def test_freeze_to_rom_preserves_function(self):
+        key = jax.random.PRNGKey(0)
+        w = jax.random.normal(key, (32, 16)) / np.sqrt(32)
+        dense = {"layer": {"sram": {"w": w}}}
+        frozen = rebranch.freeze_to_rom(dense, jax.random.PRNGKey(1), SPEC)
+        x = jax.random.normal(jax.random.PRNGKey(2), (4, 32))
+        y0 = x @ w
+        y1 = rebranch.apply_linear(frozen["layer"], x, SPEC)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y0),
+                                   rtol=0.05, atol=0.05)
+
+    @settings(max_examples=15, deadline=None)
+    @given(d_in=st.integers(8, 96), d_out=st.integers(8, 96),
+           batch=st.integers(1, 5))
+    def test_property_shapes_and_finite(self, d_in, d_out, batch):
+        p = rebranch.init_linear(jax.random.PRNGKey(d_in * d_out), d_in,
+                                 d_out, SPEC)
+        x = jax.random.normal(jax.random.PRNGKey(batch), (batch, d_in))
+        y = rebranch.apply_linear(p, x, SPEC)
+        assert y.shape == (batch, d_out)
+        assert bool(jnp.all(jnp.isfinite(y)))
+
+
+# ---------------------------------------------------------------------------
+# ROM image
+# ---------------------------------------------------------------------------
+
+class TestRom:
+    def test_fingerprint_stable_and_sensitive(self):
+        p = rebranch.init_linear(jax.random.PRNGKey(0), 32, 16, SPEC)
+        f1 = rom.rom_fingerprint(p)
+        f2 = rom.rom_fingerprint(p)
+        assert f1 == f2
+        p2 = jax.tree.map(lambda x: x, p)
+        p2["rom"]["w_q"] = p2["rom"]["w_q"].at[0, 0].add(1)
+        assert rom.rom_fingerprint(p2) != f1
+
+    def test_fingerprint_ignores_sram(self):
+        p = rebranch.init_linear(jax.random.PRNGKey(0), 32, 16, SPEC)
+        f1 = rom.rom_fingerprint(p)
+        p["sram"]["core"] = p["sram"]["core"] + 1.0
+        assert rom.rom_fingerprint(p) == f1
+
+    def test_rom_dominates_bytes(self):
+        """paper: >90% of parameters live in ROM."""
+        p = rebranch.init_linear(jax.random.PRNGKey(0), 512, 512, SPEC)
+        assert rom.rom_bytes(p) > 9 * rom.sram_bytes(p)

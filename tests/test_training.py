@@ -1,0 +1,255 @@
+"""Training substrate: data determinism, optimizer, schedule, checkpoint
+manager (atomic/keep-k/fingerprint/elastic), fault coordinator logic,
+gradient compression, and an end-to-end smoke train run."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs, optim
+from repro.checkpoint import manager as ckpt
+from repro.core import rebranch
+from repro.data import synthetic
+from repro.distributed import fault
+from repro.launch import steps as steps_lib
+from repro.models import api
+from repro.optim import compress, schedule
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+class TestData:
+    CFG = synthetic.DataConfig(seed=3, vocab_size=64, seq_len=32,
+                               global_batch=8)
+
+    def test_deterministic(self):
+        b1 = synthetic.markov_batch(self.CFG, step=7)
+        b2 = synthetic.markov_batch(self.CFG, step=7)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+    def test_steps_differ(self):
+        b1 = synthetic.markov_batch(self.CFG, step=7)
+        b2 = synthetic.markov_batch(self.CFG, step=8)
+        assert not np.array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+
+    def test_shards_partition_the_batch(self):
+        """Sharded reads are disjoint slices of the same global batch
+        semantics (shard takeover needs no data-state migration)."""
+        full = synthetic.markov_batch(self.CFG, step=3)
+        s0 = synthetic.markov_batch(self.CFG, step=3, shard=0, num_shards=2)
+        s1 = synthetic.markov_batch(self.CFG, step=3, shard=1, num_shards=2)
+        assert s0["tokens"].shape[0] == s1["tokens"].shape[0] == 4
+        assert full["tokens"].shape[0] == 8
+        assert not np.array_equal(np.asarray(s0["tokens"]),
+                                  np.asarray(s1["tokens"]))
+
+    def test_labels_are_shifted_tokens(self):
+        b = synthetic.markov_batch(self.CFG, step=0)
+        np.testing.assert_array_equal(
+            np.asarray(b["tokens"][:, 1:]), np.asarray(b["labels"][:, :-1]))
+
+    def test_entropy_floor_positive(self):
+        f = synthetic.entropy_floor(self.CFG)
+        assert 0.5 < f < np.log(self.CFG.vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# optimizer + schedule
+# ---------------------------------------------------------------------------
+
+class TestOptim:
+    def test_adamw_reduces_quadratic(self):
+        p = {"sram": {"w": jnp.array([3.0, -2.0])}}
+        st = optim.init(p)
+        cfg = optim.AdamWConfig(lr=0.2, weight_decay=0.0)
+        for _ in range(100):
+            g = jax.tree.map(lambda x: 2 * x, p)
+            p, st, _ = optim.update(g, st, p, cfg)
+        assert float(jnp.abs(p["sram"]["w"]).max()) < 0.1
+
+    def test_none_leaves_passthrough(self):
+        p = {"rom": {"w": None}, "sram": {"w": jnp.ones(3)}}
+        st = optim.init(p)
+        g = {"rom": {"w": None}, "sram": {"w": jnp.ones(3)}}
+        p2, st2, _ = optim.update(g, st, p, optim.AdamWConfig())
+        assert p2["rom"]["w"] is None
+        assert p2["sram"]["w"].shape == (3,)
+
+    def test_grad_clip(self):
+        p = {"w": jnp.zeros(4)}
+        st = optim.init(p)
+        g = {"w": jnp.full((4,), 1e6)}
+        _, _, m = optim.update(g, st, p, optim.AdamWConfig(grad_clip=1.0))
+        assert float(m["grad_norm"]) > 1e5   # reported pre-clip
+
+    def test_cosine_schedule(self):
+        lr0 = schedule.cosine_with_warmup(jnp.asarray(0), peak_lr=1.0,
+                                          warmup_steps=10, total_steps=100)
+        lr10 = schedule.cosine_with_warmup(jnp.asarray(10), peak_lr=1.0,
+                                           warmup_steps=10, total_steps=100)
+        lr100 = schedule.cosine_with_warmup(jnp.asarray(100), peak_lr=1.0,
+                                            warmup_steps=10, total_steps=100)
+        assert float(lr0) == 0.0
+        assert float(lr10) == pytest.approx(1.0)
+        assert float(lr100) == pytest.approx(0.1, abs=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+class TestCompression:
+    def test_error_feedback_unbiased_over_time(self):
+        """Repeatedly compressing the same gradient with error feedback
+        converges to it in the mean (EF-SGD property)."""
+        g = jnp.asarray(np.random.default_rng(0).normal(size=(64,)) * 1e-3)
+        err = jnp.zeros_like(g)
+        acc = jnp.zeros_like(g)
+        n = 50
+        for _ in range(n):
+            q, scale, err = compress.quantize_with_feedback(g, err)
+            acc = acc + q.astype(jnp.float32) * scale
+        np.testing.assert_allclose(np.asarray(acc / n), np.asarray(g),
+                                   atol=float(jnp.abs(g).max()) * 0.02)
+
+    def test_quantize_roundtrip_bounded(self):
+        g = jnp.asarray(np.random.default_rng(1).normal(size=(32, 8)))
+        q, scale, err = compress.quantize_with_feedback(
+            g, jnp.zeros_like(g))
+        deq = q.astype(jnp.float32) * scale
+        assert float(jnp.abs(deq - g).max()) <= float(scale) * 0.5 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# checkpoint manager
+# ---------------------------------------------------------------------------
+
+def _tiny_state():
+    cfg = configs.get_smoke("gemma_2b")
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    t, f = rebranch.partition(params)
+    return cfg, params, t, f, optim.init(t)
+
+
+class TestCheckpoint:
+    def test_save_restore_roundtrip(self, tmp_path):
+        cfg, params, t, f, opt = _tiny_state()
+        ckpt.save(str(tmp_path), 5, t, opt, params)
+        step, t2, opt2, _ = ckpt.restore(str(tmp_path), t, opt, params)
+        assert step == 5
+        for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(t2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert int(opt2["step"]) == int(opt["step"])
+
+    def test_keep_k_gc(self, tmp_path):
+        cfg, params, t, f, opt = _tiny_state()
+        for s in [1, 2, 3, 4, 5]:
+            ckpt.save(str(tmp_path), s, t, opt, params, keep=2)
+        assert ckpt.latest_steps(str(tmp_path)) == [4, 5]
+
+    def test_rom_fingerprint_guard(self, tmp_path):
+        """Restoring against a different ROM image must refuse."""
+        cfg, params, t, f, opt = _tiny_state()
+        ckpt.save(str(tmp_path), 1, t, opt, params)
+        params2 = api.init(jax.random.PRNGKey(99), cfg)   # different ROM
+        with pytest.raises(ValueError, match="fingerprint"):
+            ckpt.restore(str(tmp_path), t, opt, params2)
+
+    def test_async_save(self, tmp_path):
+        cfg, params, t, f, opt = _tiny_state()
+        th = ckpt.save(str(tmp_path), 7, t, opt, params, async_=True)
+        th.join()
+        assert ckpt.latest_steps(str(tmp_path)) == [7]
+
+    def test_atomic_no_tmp_left(self, tmp_path):
+        cfg, params, t, f, opt = _tiny_state()
+        ckpt.save(str(tmp_path), 3, t, opt, params)
+        assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# fault coordinator
+# ---------------------------------------------------------------------------
+
+class TestFault:
+    CFG = fault.FaultConfig(heartbeat_timeout_s=10, min_data_parallel=2)
+
+    def _hosts(self, n, spares=0):
+        hs = [fault.HostState(i, last_heartbeat_s=100.0,
+                              last_step_time_s=1.0) for i in range(n)]
+        hs += [fault.HostState(n + i, last_heartbeat_s=100.0, is_spare=True)
+               for i in range(spares)]
+        return hs
+
+    def test_dead_detection(self):
+        hs = self._hosts(4)
+        hs[2] = fault.HostState(2, last_heartbeat_s=80.0)
+        assert fault.dead_hosts(hs, now_s=100.0, cfg=self.CFG) == [2]
+
+    def test_straggler_detection(self):
+        hs = self._hosts(8)
+        hs[3] = fault.HostState(3, 100.0, last_step_time_s=5.0)
+        assert fault.stragglers(hs, self.CFG) == [3]
+
+    def test_spare_swap(self):
+        hs = self._hosts(8, spares=2)
+        plan = fault.plan_remesh(hs, failed=[1], data_axis=4,
+                                 hosts_per_data_row=2, cfg=self.CFG)
+        assert plan.action == "swap_spares"
+        assert plan.new_data_axis == 4
+        assert plan.replaced_by_spares == ((1, 8),)
+
+    def test_shrink_to_power_of_two(self):
+        hs = self._hosts(16)
+        plan = fault.plan_remesh(hs, failed=[0, 1, 2], data_axis=8,
+                                 hosts_per_data_row=2, cfg=self.CFG)
+        assert plan.action == "shrink"
+        assert plan.new_data_axis == 4           # 13 alive -> 6 rows -> 4
+        assert len(plan.surviving_hosts) == 8
+
+    def test_abort_below_min(self):
+        hs = self._hosts(4)
+        plan = fault.plan_remesh(hs, failed=[0, 1, 2], data_axis=2,
+                                 hosts_per_data_row=2, cfg=self.CFG)
+        assert plan.action == "abort"
+
+    def test_shard_reassignment_total(self):
+        m = fault.reassign_data_shards(16, surviving=[0, 3, 5])
+        assert set(m.keys()) == set(range(16))
+        assert set(m.values()) <= {0, 3, 5}
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: smoke train run via the driver path
+# ---------------------------------------------------------------------------
+
+class TestEndToEnd:
+    def test_train_loss_decreases_and_resumes(self, tmp_path):
+        cfg = configs.get_smoke("gemma_2b")
+        dcfg = synthetic.DataConfig(seed=0, vocab_size=cfg.vocab_size,
+                                    seq_len=32, global_batch=4)
+        params = api.init(jax.random.PRNGKey(0), cfg)
+        t, f = rebranch.partition(params)
+        opt = optim.init(t)
+        step_fn = jax.jit(steps_lib.make_train_step(
+            cfg, optim.AdamWConfig(lr=5e-3), loss_chunks=2))
+        losses = []
+        for s in range(12):
+            batch = synthetic.markov_batch(dcfg, s)
+            t, opt, m = step_fn(t, f, opt, batch)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0]
+        # checkpoint + restore mid-run == bit-identical continuation
+        ckpt.save(str(tmp_path), 12, t, opt, params)
+        _, t2, opt2, _ = ckpt.restore(str(tmp_path), t, opt, params)
+        b = synthetic.markov_batch(dcfg, 12)
+        t_a, _, ma = step_fn(t, f, opt, b)
+        t_b, _, mb = step_fn(t2, f, opt2, b)
+        assert float(ma["loss"]) == pytest.approx(float(mb["loss"]),
+                                                  rel=1e-6)
