@@ -1,0 +1,107 @@
+"""Conv trunk kernel wall-clock: XLA fake-quant baseline vs Pallas fused.
+
+Times DarkNet-19-shaped ReBranch conv layers (the paper's headline
+detection backbone) under the three trunk dispatches:
+
+  dequant  : dequantised weights + fake-quantised activations, XLA conv
+             (the paper-faithful baseline)
+  pallas   : kernels.trunk_conv — fused im2col kernel (quantise in VMEM,
+             int8 MXU dots, scale epilogue) + XLA branch
+  fused    : kernels.rebranch_conv — trunk AND compress sketch in one
+             pass over the patch matrix (inference fast path)
+
+  PYTHONPATH=src python -m benchmarks.conv_kernel [--size 104] [--batch 1]
+      [--layers 6] [--repeat 5] [--tag note]
+
+Prints CSV rows:  tag,layer,cin,cout,k,hw,impl,ms
+
+NOTE: off-TPU the Pallas kernels run in interpret mode — wall-clock there
+measures the interpreter, not the kernel; use the XLA rows as the CPU
+baseline and run on TPU for the real comparison.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rebranch import ReBranchSpec
+from repro.kernels import ops
+from repro.models import cnn
+
+
+def darknet_layer_shapes(size: int, max_layers: int):
+    """(c_in, c_out, k, hw) per conv of DarkNet-19 at input `size`."""
+    shapes, c_in, hw = [], 3, size
+    for item in cnn.DARKNET19:
+        if item == "M":
+            hw //= 2
+            continue
+        c, k = item
+        shapes.append((c_in, c, k, hw))
+        c_in = c
+    return shapes[:max_layers]
+
+
+def _time(fn, *args, repeat: int) -> float:
+    jax.block_until_ready(fn(*args))              # compile + warm cache
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / repeat * 1e3
+
+
+def bench_layer(c_in: int, c_out: int, k: int, hw: int, batch: int,
+                repeat: int, key) -> dict[str, float]:
+    spec = ReBranchSpec()
+    p = cnn.init_conv(key, k, c_in, c_out, spec)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (batch, hw, hw, c_in))
+    rom, sram = p["rom"], p["sram"]
+
+    dequant = jax.jit(lambda x: cnn.apply_conv(
+        p, x, ReBranchSpec(trunk_impl="dequant")))
+    pallas = jax.jit(lambda x: cnn.apply_conv(
+        p, x, ReBranchSpec(trunk_impl="pallas")))
+    fused = jax.jit(lambda x: ops.rebranch_conv(
+        x, rom["w_q"], rom["w_scale"], rom["C"], sram["core"], rom["U"]))
+
+    out = {}
+    for name, fn in [("dequant", dequant), ("pallas", pallas),
+                     ("fused", fused)]:
+        out[name] = _time(fn, x, repeat=repeat)
+    # sanity: the paths agree (loose: different act-quant granularity)
+    np.testing.assert_allclose(np.asarray(dequant(x)), np.asarray(fused(x)),
+                               rtol=0.1, atol=0.1)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", type=int, default=104,
+                    help="input resolution (DarkNet-19 native: 416)")
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--layers", type=int, default=6,
+                    help="how many DarkNet-19 convs to time")
+    ap.add_argument("--repeat", type=int, default=5)
+    ap.add_argument("--tag", default="conv")
+    a = ap.parse_args()
+
+    print(f"# backend={jax.default_backend()} "
+          f"(interpret mode off-TPU — see module docstring)")
+    print("tag,layer,cin,cout,k,hw,impl,ms")
+    key = jax.random.PRNGKey(0)
+    for i, (c_in, c_out, k, hw) in enumerate(
+            darknet_layer_shapes(a.size, a.layers)):
+        times = bench_layer(c_in, c_out, k, hw, a.batch, a.repeat,
+                            jax.random.fold_in(key, i))
+        for impl, ms in times.items():
+            print(f"{a.tag},{i},{c_in},{c_out},{k},{hw},{impl},{ms:.2f}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,8 @@
 import os
 import sys
 
-# make `benchmarks` importable from tests without installing the package
-sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+# make `benchmarks` importable from tests without installing the package,
+# and `_prop` (the hypothesis shim) importable from anywhere
+_ROOT = os.path.dirname(os.path.abspath(__file__))
+sys.path.insert(0, _ROOT)
+sys.path.insert(0, os.path.join(_ROOT, "tests"))

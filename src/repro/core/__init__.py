@@ -1,16 +1,21 @@
 """Core: the paper's contribution — ROM-CiM + ReBranch — as JAX modules."""
 
-from repro.core.cim import CiMConfig, cim_matmul_model, adc_transfer, macro_count
+from repro.core.cim import (
+    CiMConfig, cim_matmul_model, cim_conv_model, im2col, adc_transfer,
+    macro_count,
+)
 from repro.core.rebranch import (
     ReBranchSpec, init_linear, apply_linear, partition, combine,
-    trainable_count, frozen_count, trunk_matmul, freeze_to_rom,
+    trainable_count, frozen_count, trunk_matmul, trunk_conv, freeze_to_rom,
 )
 from repro.core.rom import rom_fingerprint, rom_bytes, sram_bytes
 from repro.core import energy, quant
 
 __all__ = [
-    "CiMConfig", "cim_matmul_model", "adc_transfer", "macro_count",
+    "CiMConfig", "cim_matmul_model", "cim_conv_model", "im2col",
+    "adc_transfer", "macro_count",
     "ReBranchSpec", "init_linear", "apply_linear", "partition", "combine",
-    "trainable_count", "frozen_count", "trunk_matmul", "freeze_to_rom",
+    "trainable_count", "frozen_count", "trunk_matmul", "trunk_conv",
+    "freeze_to_rom",
     "rom_fingerprint", "rom_bytes", "sram_bytes", "energy", "quant",
 ]

@@ -193,6 +193,62 @@ def _bitserial_model(a_q, w_q, cfg: CiMConfig) -> jax.Array:
     return acc
 
 
+# ---------------------------------------------------------------------------
+# Convolution on the macro: im2col lowering (paper §4.1 CNN workloads)
+# ---------------------------------------------------------------------------
+
+def conv_pads(size: int, k: int, stride: int, padding: str):
+    """XLA-compatible (lo, hi) padding and output size for one spatial dim."""
+    if padding == "VALID":
+        assert size >= k, f"VALID conv needs size >= kernel ({size} < {k})"
+        return (0, 0), (size - k) // stride + 1
+    if padding != "SAME":
+        raise ValueError(f"unknown padding: {padding!r}")
+    out = -(-size // stride)
+    total = max((out - 1) * stride + k - size, 0)
+    return (total // 2, total - total // 2), out
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int = 1,
+           padding: str = "SAME"):
+    """Extract conv patches: NHWC -> ([N, OH, OW, kh*kw*C], (OH, OW)).
+
+    Column order matches ``w.reshape(kh*kw*C, c_out)`` of an HWIO kernel —
+    taps row-major, input channels fastest — so
+    ``conv(x, w) == im2col(x)[0] @ w.reshape(-1, c_out)`` exactly.
+    Zero padding (conv semantics); dtype-preserving, so int8 ROM operands
+    stay int8 all the way to the macro.
+    """
+    _, h, w_sz, _ = x.shape
+    (ph0, ph1), oh = conv_pads(h, kh, stride, padding)
+    (pw0, pw1), ow = conv_pads(w_sz, kw, stride, padding)
+    xp = jnp.pad(x, ((0, 0), (ph0, ph1), (pw0, pw1), (0, 0)))
+    taps = [
+        xp[:, i:i + (oh - 1) * stride + 1:stride,
+           j:j + (ow - 1) * stride + 1:stride, :]
+        for i in range(kh) for j in range(kw)
+    ]
+    return jnp.concatenate(taps, axis=-1), (oh, ow)
+
+
+def cim_conv_model(
+    x_q: jax.Array,          # int8 [N, H, W, C_in] quantised activations
+    w_q: jax.Array,          # int8 [KH, KW, C_in, C_out] ROM contents
+    cfg: CiMConfig = DEFAULT_CIM,
+    stride: int = 1,
+    padding: str = "SAME",
+) -> jax.Array:
+    """Integer-domain CiM convolution model: f32 [N, OH, OW, C_out].
+
+    im2col through :func:`cim_matmul_model`, so every fidelity mode
+    ('ideal' / 'per_subarray' / 'bitserial') applies unchanged; this is
+    the golden reference the Pallas conv kernels are tested against.
+    """
+    kh, kw, c_in, c_out = w_q.shape
+    patches, _ = im2col(x_q, kh, kw, stride, padding)
+    return cim_matmul_model(patches, w_q.reshape(kh * kw * c_in, c_out), cfg)
+
+
 def macro_count(weights: int, cfg: CiMConfig = DEFAULT_CIM,
                 cols: int = 256) -> int:
     """How many 128x256 macros hold ``weights`` 8-bit weights (bit-planed)."""

@@ -66,9 +66,16 @@ def partition(params):
                 train[k], froz[k] = t, f
             return train, froz
         if isinstance(node, (list, tuple)):
-            pairs = [walk(v, in_rom) for v in node]
             typ = type(node)
-            return typ(p[0] for p in pairs), typ(p[1] for p in pairs)
+            if typ in (list, tuple):
+                pairs = [walk(v, in_rom) for v in node]
+                return typ(p[0] for p in pairs), typ(p[1] for p in pairs)
+            if hasattr(node, "_fields"):          # namedtuple
+                pairs = [walk(v, in_rom) for v in node]
+                return (typ(*(p[0] for p in pairs)),
+                        typ(*(p[1] for p in pairs)))
+            # other tuple subclasses (e.g. jax.sharding.PartitionSpec) are
+            # pytree LEAVES in jax.tree semantics — do not recurse/rebuild
         return (None, node) if in_rom else (node, None)
 
     return walk(params, False)
@@ -132,6 +139,65 @@ def _trunk_bwd(cfg, out_axes, res, g):
 
 
 trunk_matmul.defvjp(_trunk_fwd, _trunk_bwd)
+
+
+def conv_nhwc(x, w, stride: int = 1, padding: str = "SAME"):
+    """The repo's one NHWC/HWIO conv wrapper (models and oracles reuse it)."""
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def trunk_conv_residuals(x, w_q, w_scale):
+    """Residuals for the conv-trunk STE backward (shared by the
+    int8_native path here and the Pallas dispatch in kernels/ops.py).
+
+    zeros_like(x) carries only shape/dtype into the backward (the conv is
+    linear in x, so its vjp never reads the primal values); XLA DCEs it.
+    """
+    return (w_q, w_scale, jnp.zeros_like(x))
+
+
+def trunk_conv_ste_bwd(stride: int, padding: str, res, g):
+    """Shared STE backward: dx = conv_transpose(g, dequant(w)), no dW."""
+    w_q, w_scale, x0 = res
+    w_deq = w_q.astype(g.dtype) * w_scale.reshape(1, 1, 1, -1).astype(g.dtype)
+    dx = jax.vjp(lambda t: conv_nhwc(t, w_deq, stride, padding), x0)[1](g)[0]
+    zero = lambda a: np.zeros(a.shape, jax.dtypes.float0)
+    return dx, zero(w_q), zero(w_scale)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def trunk_conv(cfg: cim_lib.CiMConfig, stride: int, padding: str,
+               x, w_q, w_scale):
+    """Conv analogue of :func:`trunk_matmul`: frozen int8 ROM trunk conv.
+
+    Forward im2cols the NHWC input, quantises each patch row dynamically
+    and runs the (possibly non-ideal) CiM macro model on the patch matrix;
+    backward is the straight-through estimator
+    ``dx = conv_transpose(g, dequant(w))``.  No dW is ever produced.
+
+    x: [N, H, W, C_in] float;  w_q: [KH, KW, C_in, C_out] int8;
+    w_scale: per-output-channel f32 (any shape reducible to [C_out]).
+    """
+    kh, kw, c_in, c_out = w_q.shape
+    patches, _ = cim_lib.im2col(x, kh, kw, stride, padding)
+    p_q, sp = quant.quantize_activations(patches)
+    out = cim_lib.cim_matmul_model(p_q, w_q.reshape(kh * kw * c_in, c_out),
+                                   cfg)
+    return (out * sp).astype(x.dtype) * w_scale.reshape(-1).astype(x.dtype)
+
+
+def _trunk_conv_fwd(cfg, stride, padding, x, w_q, w_scale):
+    out = trunk_conv(cfg, stride, padding, x, w_q, w_scale)
+    return out, trunk_conv_residuals(x, w_q, w_scale)
+
+
+def _trunk_conv_bwd(cfg, stride, padding, res, g):
+    return trunk_conv_ste_bwd(stride, padding, res, g)
+
+
+trunk_conv.defvjp(_trunk_conv_fwd, _trunk_conv_bwd)
 
 
 def trunk_matmul_dequant(cfg, x, w_q, w_scale):

@@ -2,9 +2,30 @@
 
 cim_matmul      : the ROM-CiM macro (subarray tiling, bit-serial, 5-bit ADC)
 rebranch_matmul : fused frozen-trunk int8 + low-rank branch matmul
+cim_conv        : the macro on im2col conv patches (paper §4.1 CNN trunks)
+trunk_conv      : frozen-trunk conv, in-VMEM act quantisation, STE backward
+rebranch_conv   : fused trunk conv + 1x1 compress sketch in one patch pass
+
+Trunk dispatch table (``ReBranchSpec.trunk_impl``), for linears AND convs:
+
+  'int8_native' : pure-jnp CiM macro model (core.cim) on int8 operands —
+                  the default; exact fidelity control, runs anywhere, and
+                  what accuracy studies should use.
+  'dequant'     : dequantise the ROM image and run a plain XLA matmul/conv
+                  on fake-quantised activations — the paper-faithful
+                  baseline the perf work is measured against.
+  'pallas'      : these kernels — one fused pass (quantise in VMEM, int8
+                  MXU dots, scale epilogue); the deployment fast path on
+                  TPU, interpret-mode elsewhere.
 """
 
-from repro.kernels.ops import cim_matmul, rebranch_matmul, trunk_matmul_pallas
+from repro.kernels.ops import (
+    cim_matmul, rebranch_matmul, trunk_matmul_pallas,
+    cim_conv, rebranch_conv, trunk_conv,
+)
 from repro.kernels import ref
 
-__all__ = ["cim_matmul", "rebranch_matmul", "trunk_matmul_pallas", "ref"]
+__all__ = [
+    "cim_matmul", "rebranch_matmul", "trunk_matmul_pallas",
+    "cim_conv", "rebranch_conv", "trunk_conv", "ref",
+]

@@ -50,37 +50,39 @@ def _signed_adc(psum, full_range, cfg: cim_lib.CiMConfig):
     return jnp.clip(jnp.round(psum / lsb + 1e-3), -half, half) * lsb
 
 
-def _cim_kernel(cfg: cim_lib.CiMConfig, x_ref, w_ref, o_ref):
-    """One (bm, bn) output block; K accumulated across grid axis 2."""
+def cim_block_dot(cfg: cim_lib.CiMConfig, x, w):
+    """Mode-dependent macro math for one VMEM block: int8 (bm, bk) x
+    int8 (bk, bn) -> f32 (bm, bn).
 
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
-    x = x_ref[...]                                # int8 (bm, bk)
-    w = w_ref[...]                                # int8 (bk, bn)
+    bk must hold whole 128-row subarrays (bk % rows == 0) so subarray
+    boundaries align with global K offsets — this is what keeps any kernel
+    built on this helper bit-compatible with core.cim.cim_matmul_model.
+    Shared by the matmul kernel here and the fused conv kernel in
+    rebranch_conv.py.
+    """
     rows = cfg.rows_per_subarray
 
     if cfg.mode == "ideal":
-        acc = _dot_int8(x, w).astype(jnp.float32)
+        return _dot_int8(x, w).astype(jnp.float32)
 
-    elif cfg.mode == "per_subarray":
+    if cfg.mode == "per_subarray":
         s = x.shape[1] // rows
         full_range = rows * 127.0
-        acc = jnp.zeros_like(o_ref)
+        acc = jnp.zeros((x.shape[0], w.shape[1]), jnp.float32)
         for si in range(s):
             xs = x[:, si * rows:(si + 1) * rows].astype(jnp.float32)
             ws = w[si * rows:(si + 1) * rows, :].astype(jnp.float32)
             acc = acc + _signed_adc(_dot_f32(xs, ws), full_range, cfg)
+        return acc
 
-    elif cfg.mode == "bitserial":
+    if cfg.mode == "bitserial":
         s = x.shape[1] // rows
         gmax = cfg.group_max
         mag_bits = cfg.weight_bits - 1
         act_groups = -(-(cfg.act_bits - 1) // cfg.act_group_bits)
         x_i = x.astype(jnp.int32)
         w_i = w.astype(jnp.int32)
-        acc = jnp.zeros_like(o_ref)
+        acc = jnp.zeros((x.shape[0], w.shape[1]), jnp.float32)
         for sa, a_part in ((0, jnp.maximum(x_i, 0)), (1, jnp.maximum(-x_i, 0))):
             for sw, w_part in ((0, jnp.maximum(w_i, 0)),
                                (1, jnp.maximum(-w_i, 0))):
@@ -99,10 +101,19 @@ def _cim_kernel(cfg: cim_lib.CiMConfig, x_ref, w_ref, o_ref):
                             rng = jnp.maximum(popcount * gmax, 1.0)
                             sensed = _adc(counts, rng, cfg)
                             acc = acc + sign * (4.0 ** g) * (2.0 ** j) * sensed
-    else:
-        raise ValueError(f"unknown CiM mode: {cfg.mode!r}")
+        return acc
 
-    o_ref[...] += acc
+    raise ValueError(f"unknown CiM mode: {cfg.mode!r}")
+
+
+def _cim_kernel(cfg: cim_lib.CiMConfig, x_ref, w_ref, o_ref):
+    """One (bm, bn) output block; K accumulated across grid axis 2."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += cim_block_dot(cfg, x_ref[...], w_ref[...])
 
 
 def cim_matmul_pallas(
@@ -121,6 +132,8 @@ def cim_matmul_pallas(
     m, k = x_q.shape
     k2, n = w_q.shape
     assert k == k2, (x_q.shape, w_q.shape)
+    if 0 in (m, n, k):
+        return jnp.zeros((m, n), jnp.float32)
     rows = cfg.rows_per_subarray
     assert block_k % rows == 0, "K blocks must hold whole subarrays"
 

@@ -10,7 +10,12 @@ import numpy as np
 
 from repro.core import cim as cim_lib
 from repro.core import quant
+from repro.core.rebranch import trunk_conv_residuals, trunk_conv_ste_bwd
 from repro.kernels.cim_matmul import cim_matmul_pallas
+from repro.kernels.rebranch_conv import (
+    cim_conv_pallas, rebranch_conv_pallas, trunk_conv_pallas as
+    _trunk_conv_pallas_fwd,
+)
 from repro.kernels.rebranch_matmul import rebranch_matmul_pallas
 
 
@@ -50,3 +55,47 @@ trunk_matmul_pallas.defvjp(_fwd, _bwd)
 def rebranch_matmul(x, w_q, w_scale, c, core, u):
     """Fused trunk+branch ReBranch layer forward (beyond-paper fast path)."""
     return rebranch_matmul_pallas(x, w_q, w_scale, c, core, u)
+
+
+# ---------------------------------------------------------------------------
+# convolution dispatch (models/cnn.py, spec.trunk_impl == 'pallas')
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg", "stride", "padding"))
+def cim_conv(x_q, w_q, cfg: cim_lib.CiMConfig = cim_lib.DEFAULT_CIM,
+             stride: int = 1, padding: str = "SAME"):
+    """int8 x int8 CiM convolution via the Pallas im2col macro kernel."""
+    return cim_conv_pallas(x_q, w_q, cfg, stride=stride, padding=padding)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def trunk_conv(cfg: cim_lib.CiMConfig, stride: int, padding: str,
+               x, w_q, w_scale):
+    """Frozen-trunk convolution on the Pallas CiM kernel, STE backward.
+
+    Drop-in for core.rebranch.trunk_conv (spec.trunk_impl == 'pallas');
+    activation quantisation happens in VMEM at per-(patch-row, k-block)
+    granularity inside the fused kernel.
+    """
+    return _trunk_conv_pallas_fwd(x, w_q, w_scale, cfg,
+                                  stride=stride, padding=padding)
+
+
+def _conv_fwd(cfg, stride, padding, x, w_q, w_scale):
+    out = trunk_conv(cfg, stride, padding, x, w_q, w_scale)
+    return out, trunk_conv_residuals(x, w_q, w_scale)
+
+
+def _conv_bwd(cfg, stride, padding, res, g):
+    return trunk_conv_ste_bwd(stride, padding, res, g)
+
+
+trunk_conv.defvjp(_conv_fwd, _conv_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding"))
+def rebranch_conv(x, w_q, w_scale, c, core, u,
+                  stride: int = 1, padding: str = "SAME"):
+    """Fused trunk+branch ReBranch conv forward (beyond-paper fast path)."""
+    return rebranch_conv_pallas(x, w_q, w_scale, c, core, u,
+                                stride=stride, padding=padding)

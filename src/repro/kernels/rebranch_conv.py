@@ -1,0 +1,263 @@
+"""Pallas TPU kernel: fused im2col ReBranch convolution (paper §4.1 CNNs).
+
+YOLoC's headline workloads are detection CNNs (VGG-8, ResNet-18,
+DarkNet-19, Tiny-YOLO) whose trunk convs live in ROM-CiM.  On TPU a conv
+lowers to a matmul over the im2col patch matrix  P [N*OH*OW, KH*KW*C_in],
+so the conv kernels here are the conv analogues of cim_matmul /
+rebranch_matmul, built on the *same* per-block macro math
+(``cim_matmul.cim_block_dot``) — bit-compatible with
+``core.cim.cim_conv_model`` in every fidelity mode.
+
+Three entry points:
+
+cim_conv_pallas      : int8 patches x int8 ROM weights through the macro
+                       model (ideal / per_subarray / bitserial) — the conv
+                       twin of cim_matmul_pallas.
+trunk_conv_pallas    : float activations in; per-(patch-row, k-block)
+                       dynamic int8 quantisation happens in VMEM, the int8
+                       MXU dot and the per-channel scale epilogue follow in
+                       the same pass (spec.trunk_impl == 'pallas').
+rebranch_conv_pallas : the fused ReBranch conv — trunk conv AND the 1x1
+                       compress sketch  t1 = P @ blockdiag(C)  in a single
+                       pass over the patch matrix; the tiny epilogue
+                       ``out = trunk*w_scale + (t1 @ core) @ U`` is left to
+                       XLA.  Key identity: 1x1-compress -> KxK core conv
+                       composes into one KxK conv, so the trunk's patch
+                       matrix serves the branch exactly:
+
+                         branch = ((P @ kron(I_taps, C)) @ core_flat) @ U
+
+                       One HBM read of the patch matrix instead of two.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import cim as cim_lib
+from repro.core.quant import quantize_activations
+from repro.kernels.cim_matmul import cim_block_dot, cim_matmul_pallas
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _patch_matrix(x: jax.Array, kh: int, kw: int, stride: int, padding: str):
+    """im2col + flatten: NHWC -> (P [M, R], (n, oh, ow))."""
+    n = x.shape[0]
+    patches, (oh, ow) = cim_lib.im2col(x, kh, kw, stride, padding)
+    return patches.reshape(n * oh * ow, patches.shape[-1]), (n, oh, ow)
+
+
+def _quant_rows(x: jax.Array):
+    """In-VMEM dynamic int8 quantisation, per (row, k-block) — the same
+    quantiser as the int8_native path (pure jnp, safe in a kernel body)."""
+    return quantize_activations(x)
+
+
+# ---------------------------------------------------------------------------
+# int8-in conv: the conv twin of cim_matmul_pallas
+# ---------------------------------------------------------------------------
+
+def cim_conv_pallas(
+    x_q: jax.Array,                 # int8 [N, H, W, C_in]
+    w_q: jax.Array,                 # int8 [KH, KW, C_in, C_out]
+    cfg: cim_lib.CiMConfig = cim_lib.DEFAULT_CIM,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Blocked CiM conv; returns f32 [N, OH, OW, C_out] integer-valued
+    results, bit-compatible with core.cim.cim_conv_model."""
+    kh, kw, c_in, c_out = w_q.shape
+    p, (n, oh, ow) = _patch_matrix(x_q, kh, kw, stride, padding)
+    # clamp K blocks to the (subarray-aligned) patch width so small-R convs
+    # (e.g. a 3x3x3 stem, R=27) don't pad the contraction out to block_k
+    rows = cfg.rows_per_subarray
+    bk = min(block_k, _round_up(kh * kw * c_in, rows))
+    out = cim_matmul_pallas(
+        p, w_q.reshape(kh * kw * c_in, c_out), cfg,
+        block_m=block_m, block_n=block_n, block_k=bk,
+        interpret=interpret)
+    return out.reshape(n, oh, ow, c_out)
+
+
+# ---------------------------------------------------------------------------
+# float-in trunk conv: in-VMEM quantisation + macro dot + scale epilogue
+# ---------------------------------------------------------------------------
+
+def _trunk_conv_kernel(cfg, x_ref, wq_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)            # (bm, bk) patch slab
+    x_q, scale = _quant_rows(x)
+    o_ref[...] += cim_block_dot(cfg, x_q, wq_ref[...]) * scale
+
+
+def _fused_conv_kernel(cfg, x_ref, wq_ref, c_ref, trunk_ref, t1_ref):
+    n_idx, k_idx = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init_trunk():
+        trunk_ref[...] = jnp.zeros_like(trunk_ref)
+
+    @pl.when((k_idx == 0) & (n_idx == 0))
+    def _init_t1():
+        t1_ref[...] = jnp.zeros_like(t1_ref)
+
+    x = x_ref[...].astype(jnp.float32)            # (bm, bk) patch slab
+    x_q, scale = _quant_rows(x)
+    trunk_ref[...] += cim_block_dot(cfg, x_q, wq_ref[...]) * scale
+
+    @pl.when(n_idx == 0)
+    def _compress():
+        t1_ref[...] += jax.lax.dot_general(
+            x, c_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+
+def _conv_blocks(m: int, r: int, c_out: int, bm: int, bn: int, bk: int,
+                 rows: int):
+    """Clamp block sizes to the problem and align K blocks to subarrays."""
+    assert bk % rows == 0, "K blocks must hold whole subarrays"
+    bk = min(bk, _round_up(r, rows))
+    return min(bm, m), min(bn, c_out), bk
+
+
+def trunk_conv_pallas(
+    x: jax.Array,                   # [N, H, W, C_in] float
+    w_q: jax.Array,                 # int8 [KH, KW, C_in, C_out] (ROM)
+    w_scale: jax.Array,             # per-output-channel f32
+    cfg: cim_lib.CiMConfig = cim_lib.CiMConfig(mode="ideal"),
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Frozen-trunk convolution, quantisation fused into the macro pass."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    kh, kw, c_in, c_out = w_q.shape
+    p, (n, oh, ow) = _patch_matrix(x, kh, kw, stride, padding)
+    m, r = p.shape
+    if m == 0:
+        return jnp.zeros((n, oh, ow, c_out), x.dtype)
+    bm, bn, bk = _conv_blocks(m, r, c_out, block_m, block_n, block_k,
+                              cfg.rows_per_subarray)
+    pad_m, pad_n, pad_k = (-m) % bm, (-c_out) % bn, (-r) % bk
+    pp = jnp.pad(p, ((0, pad_m), (0, pad_k)))
+    wp = jnp.pad(w_q.reshape(r, c_out), ((0, pad_k), (0, pad_n)))
+    gm, gn, gk = pp.shape[0] // bm, wp.shape[1] // bn, pp.shape[1] // bk
+
+    out = pl.pallas_call(
+        functools.partial(_trunk_conv_kernel, cfg),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pp.shape[0], wp.shape[1]),
+                                       jnp.float32),
+        interpret=interpret,
+    )(pp, wp)
+    out = out[:m, :c_out] * w_scale.reshape(1, -1).astype(jnp.float32)
+    return out.reshape(n, oh, ow, c_out).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused ReBranch conv: trunk + compress sketch in one pass over the patches
+# ---------------------------------------------------------------------------
+
+def rebranch_conv_pallas(
+    x: jax.Array,                   # [N, H, W, C_in] float
+    w_q: jax.Array,                 # int8 [KH, KW, C_in, C_out] trunk (ROM)
+    w_scale: jax.Array,             # per-output-channel f32
+    c: jax.Array,                   # [1, 1, C_in, C_c] fixed compress (ROM)
+    core: jax.Array,                # [KH, KW, C_c, C_u] trainable (SRAM)
+    u: jax.Array,                   # [1, 1, C_u, C_out] fixed decompress (ROM)
+    cfg: cim_lib.CiMConfig = cim_lib.CiMConfig(mode="ideal"),
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused ReBranch convolution forward (beyond-paper fast path).
+
+    The 1x1-compress -> KxK-core branch composes into one KxK conv, so
+    both the trunk dot and the compress sketch read the SAME patch matrix:
+      trunk[m, n] += macro(quant_blk(P), w_q) * scale_blk
+      t1[m, tc]   += P @ kron(I_taps, C)
+    One Pallas pass; the O(M*(C_out + taps*C_c)) epilogue stays in XLA.
+
+    Cost note: kron(I, C) densifies the block-diagonal compress, so the
+    sketch dot's FLOPs/VMEM scale with taps^2 * C_in * C_c rather than
+    taps * C_in * C_c — immaterial next to the trunk dot for the paper's
+    D=4 ratios (taps*C_c << C_out), but a per-tap structured dot is the
+    right follow-up for very wide branches (see ROADMAP).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    kh, kw, c_in, c_out = w_q.shape
+    assert core.shape[:2] == (kh, kw), (core.shape, w_q.shape)
+    c_c, c_u = core.shape[2], core.shape[3]
+    taps = kh * kw
+
+    p, (n, oh, ow) = _patch_matrix(x, kh, kw, stride, padding)
+    m, r = p.shape
+    if m == 0:
+        return jnp.zeros((n, oh, ow, c_out), x.dtype)
+    # block-diagonal compress over the taps: (R, taps*C_c)
+    cblk = jnp.kron(jnp.eye(taps, dtype=jnp.float32),
+                    c.reshape(c_in, c_c).astype(jnp.float32))
+    cdim = taps * c_c
+
+    bm, bn, bk = _conv_blocks(m, r, c_out, block_m, block_n, block_k,
+                              cfg.rows_per_subarray)
+    pad_m, pad_n, pad_k = (-m) % bm, (-c_out) % bn, (-r) % bk
+    pp = jnp.pad(p, ((0, pad_m), (0, pad_k)))
+    wp = jnp.pad(w_q.reshape(r, c_out), ((0, pad_k), (0, pad_n)))
+    cp = jnp.pad(cblk, ((0, pad_k), (0, 0)))
+    gm, gn, gk = pp.shape[0] // bm, wp.shape[1] // bn, pp.shape[1] // bk
+
+    trunk, t1 = pl.pallas_call(
+        functools.partial(_fused_conv_kernel, cfg),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk, cdim), lambda i, j, kk: (kk, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((bm, cdim), lambda i, j, kk: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((pp.shape[0], wp.shape[1]), jnp.float32),
+            jax.ShapeDtypeStruct((pp.shape[0], cdim), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pp, wp, cp)
+
+    out = trunk[:m, :c_out] * w_scale.reshape(1, -1).astype(jnp.float32)
+    branch = (t1[:m] @ core.reshape(cdim, c_u).astype(jnp.float32)
+              ) @ u.reshape(c_u, c_out).astype(jnp.float32)
+    return (out + branch).reshape(n, oh, ow, c_out).astype(x.dtype)

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import cim as cim_lib
-from repro.core.quant import INT8_MAX
+from repro.core.quant import quantize_activations
 
 
 def cim_matmul_ref(x_q: jax.Array, w_q: jax.Array,
@@ -26,11 +26,7 @@ def _block_quant(x: jax.Array, block_k: int):
     kernel's in-VMEM quantisation granularity exactly."""
     m, k = x.shape
     assert k % block_k == 0
-    xb = x.reshape(m, k // block_k, block_k)
-    absmax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
-    scale = jnp.maximum(absmax, 1e-8) / INT8_MAX
-    x_q = jnp.clip(jnp.round(xb / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
-    return x_q, scale
+    return quantize_activations(x.reshape(m, k // block_k, block_k))
 
 
 def rebranch_matmul_ref(x: jax.Array, w_q: jax.Array, w_scale: jax.Array,
@@ -60,3 +56,62 @@ def rebranch_matmul_ref(x: jax.Array, w_q: jax.Array, w_scale: jax.Array,
     t1 = xp.astype(jnp.float32) @ cp.astype(jnp.float32)
     branch = (t1 @ core.astype(jnp.float32)) @ u.astype(jnp.float32)
     return (trunk + branch).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# conv kernels (kernels/rebranch_conv.py)
+# ---------------------------------------------------------------------------
+
+def cim_conv_ref(x_q: jax.Array, w_q: jax.Array, cfg: cim_lib.CiMConfig,
+                 stride: int = 1, padding: str = "SAME") -> jax.Array:
+    """Oracle for kernels.cim_conv: im2col through the core CiM model."""
+    return cim_lib.cim_conv_model(x_q, w_q, cfg, stride, padding)
+
+
+def _blocked_cim_trunk(p: jax.Array, w_mat: jax.Array,
+                       cfg: cim_lib.CiMConfig, block_k: int) -> jax.Array:
+    """Patch matmul with the fused kernels' exact numerics: per-(row,
+    k-block) dynamic quantisation, macro math per block, per-block scale.
+    K blocks are subarray-aligned, so running the macro model block-by-block
+    is identical to running it over the full contraction."""
+    m, r = p.shape
+    bk = min(block_k, -(-r // cfg.rows_per_subarray) * cfg.rows_per_subarray)
+    pad = (-r) % bk
+    pp = jnp.pad(p, ((0, 0), (0, pad)))
+    wp = jnp.pad(w_mat, ((0, pad), (0, 0)))
+    acc = jnp.zeros((m, w_mat.shape[1]), jnp.float32)
+    for kb in range(pp.shape[1] // bk):
+        xb = pp[:, kb * bk:(kb + 1) * bk].astype(jnp.float32)
+        x_q, scale = quantize_activations(xb)
+        out = cim_lib.cim_matmul_model(x_q, wp[kb * bk:(kb + 1) * bk], cfg)
+        acc = acc + out * scale
+    return acc
+
+
+def trunk_conv_ref(x: jax.Array, w_q: jax.Array, w_scale: jax.Array,
+                   cfg: cim_lib.CiMConfig, stride: int = 1,
+                   padding: str = "SAME", block_k: int = 512) -> jax.Array:
+    """Oracle for kernels.trunk_conv (float-in fused trunk conv)."""
+    kh, kw, c_in, c_out = w_q.shape
+    patches, (oh, ow) = cim_lib.im2col(x, kh, kw, stride, padding)
+    p = patches.reshape(-1, kh * kw * c_in)
+    acc = _blocked_cim_trunk(p, w_q.reshape(-1, c_out), cfg, block_k)
+    out = acc * w_scale.reshape(1, -1).astype(jnp.float32)
+    return out.reshape(x.shape[0], oh, ow, c_out).astype(x.dtype)
+
+
+def rebranch_conv_ref(x: jax.Array, w_q: jax.Array, w_scale: jax.Array,
+                      c: jax.Array, core: jax.Array, u: jax.Array,
+                      cfg: cim_lib.CiMConfig = cim_lib.CiMConfig(mode="ideal"),
+                      stride: int = 1, padding: str = "SAME",
+                      block_k: int = 512) -> jax.Array:
+    """Oracle for kernels.rebranch_conv: blocked-quant trunk + the UNfused
+    branch (1x1 compress -> KxK core -> 1x1 decompress as three XLA convs),
+    proving the fused patch-matrix branch identity."""
+    from repro.core.rebranch import conv_nhwc
+
+    trunk = trunk_conv_ref(x, w_q, w_scale, cfg, stride, padding, block_k)
+    t = conv_nhwc(x.astype(jnp.float32), c.astype(jnp.float32), 1, padding)
+    t = conv_nhwc(t, core.astype(jnp.float32), stride, padding)
+    branch = conv_nhwc(t, u.astype(jnp.float32), 1, padding)
+    return (trunk.astype(jnp.float32) + branch).astype(x.dtype)

@@ -5,9 +5,22 @@ with  1x1 compress -> KxK trainable core conv -> 1x1 decompress  (branch;
 the point-wise (de)compression layers are fixed, only the core trains).
 With D=U=4 the branch holds 1/16 of the trunk parameters.
 
-NHWC layout.  Trunk conv runs on fake-quantised weights+activations (STE);
-the exact CiM fidelity path (im2col through core.cim) is available via
-spec.cim.mode for accuracy studies.
+NHWC layout.  The trunk conv honours ``spec.trunk_impl`` (same dispatch
+table as ReBranch linears — every backward is the straight-through
+estimator, so branch training is identical under all three):
+
+  'int8_native' : im2col through the core.cim macro model on int8
+                  operands (fidelity set by spec.cim.mode: ideal /
+                  per_subarray / bitserial) — the default; use it for
+                  accuracy studies and anywhere correctness matters.
+  'dequant'     : dequantised weights + fake-quantised activations on a
+                  plain XLA conv — the paper-faithful baseline; fastest
+                  on CPU, 2x the weight traffic on TPU.
+  'pallas'      : kernels.trunk_conv — the fused Pallas im2col kernel
+                  (in-VMEM per-patch-row quantisation, int8 MXU dots,
+                  per-channel scale epilogue); the TPU deployment path.
+                  The fully-fused trunk+compress kernel is exposed as
+                  kernels.rebranch_conv for inference.
 """
 
 from __future__ import annotations
@@ -19,8 +32,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import cim as cim_lib
 from repro.core import quant
+from repro.core import rebranch as rebranch_lib
 from repro.core.rebranch import ReBranchSpec
 from repro.models.config import ArchConfig
 
@@ -29,10 +42,7 @@ from repro.models.config import ArchConfig
 # ReBranch convolution
 # ---------------------------------------------------------------------------
 
-def _conv(x, w, stride=1, padding="SAME"):
-    return jax.lax.conv_general_dilated(
-        x, w, (stride, stride), padding,
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+_conv = rebranch_lib.conv_nhwc
 
 
 def init_conv(key, k: int, c_in: int, c_out: int, spec: ReBranchSpec,
@@ -62,8 +72,16 @@ def apply_conv(params, x, spec: ReBranchSpec, stride: int = 1):
     if not spec.enabled:
         return _conv(x, params["sram"]["w"], stride)
     rom = params["rom"]
-    w = rom["w_q"].astype(x.dtype) * rom["w_scale"].astype(x.dtype)
-    y = _conv(quant.fake_quant_ste(x), w, stride)
+    if spec.trunk_impl == "dequant":
+        w = rom["w_q"].astype(x.dtype) * rom["w_scale"].astype(x.dtype)
+        y = _conv(quant.fake_quant_ste(x), w, stride)
+    elif spec.trunk_impl == "pallas":
+        from repro.kernels import ops as kops  # deferred: optional dep
+        y = kops.trunk_conv(spec.cim, stride, "SAME",
+                            x, rom["w_q"], rom["w_scale"])
+    else:  # 'int8_native'
+        y = rebranch_lib.trunk_conv(spec.cim, stride, "SAME",
+                                    x, rom["w_q"], rom["w_scale"])
     if spec.branch_enabled and "core" in params["sram"]:
         t = _conv(x, rom["C"].astype(x.dtype), 1)
         t = _conv(t, params["sram"]["core"].astype(x.dtype), stride)

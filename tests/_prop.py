@@ -1,0 +1,60 @@
+"""Property-test shim: real hypothesis when installed, else a thin fallback.
+
+The tier-1 suite must collect (and pass) on a bare interpreter, but the
+property tests are worth keeping when `hypothesis` is available
+(``pip install -r requirements-dev.txt``).  Import from here instead of
+from hypothesis:
+
+    from _prop import given, settings, st
+
+The fallback `given` runs the test body on a fixed number of seeded
+pseudo-random draws per strategy — deterministic, no shrinking, but the
+same shape/edge-case sweep intent.  Only the strategies this repo uses
+(`st.integers`) are implemented; extend as needed.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import random
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 8
+
+    class _Integers:
+        def __init__(self, lo: int, hi: int):
+            self.lo, self.hi = lo, hi
+
+        def draw(self, rng: random.Random) -> int:
+            # hit the bounds first (the usual property-test edge cases),
+            # then sample the interior
+            return rng.choice((self.lo, self.hi, rng.randint(self.lo, self.hi)))
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Integers:
+            return _Integers(min_value, max_value)
+
+    st = _Strategies()
+
+    def settings(**_kwargs):
+        """No-op decorator (max_examples/deadline are hypothesis knobs)."""
+        return lambda f: f
+
+    def given(**strategies):
+        def deco(f):
+            def wrapper(*args):          # (self,) for methods, () for funcs
+                seed = zlib.crc32(f.__qualname__.encode())
+                rng = random.Random(seed)
+                for _ in range(_FALLBACK_EXAMPLES):
+                    draws = {k: s.draw(rng) for k, s in strategies.items()}
+                    f(*args, **draws)
+            wrapper.__name__ = f.__name__
+            wrapper.__doc__ = f.__doc__
+            wrapper.__qualname__ = f.__qualname__
+            return wrapper
+        return deco

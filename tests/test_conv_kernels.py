@@ -1,0 +1,257 @@
+"""Parity harness for the fused ReBranch conv Pallas kernels.
+
+Three layers of truth, in order of authority:
+  1. jax.lax.conv golden reference — catches im2col plumbing bugs
+     (padding split, stride windows, tap/channel column order).
+  2. core.cim.cim_conv_model — the macro fidelity oracle; the int8 conv
+     kernel must agree in every CiM mode on the shared shapes.
+  3. ref.trunk_conv_ref / ref.rebranch_conv_ref — blocked-quantisation
+     oracles with the fused kernels' exact numerics.
+Plus gradient-path checks: the STE backward of both trunk_conv dispatches
+equals the vjp of the dequantised XLA conv.
+
+Everything runs in Pallas interpret mode (CPU).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cim as cim_lib
+from repro.core import quant, rebranch
+from repro.kernels import ops, ref
+from repro.kernels.rebranch_conv import (
+    cim_conv_pallas, rebranch_conv_pallas, trunk_conv_pallas,
+)
+from repro.models import cnn
+
+# strides {1, 2} x kernel sizes {1, 3} x SAME/VALID, non-multiple-of-block
+# channel counts (20, 33 vs rows_per_subarray=128 / block_k=512)
+SWEEP = [
+    (1, 1, "SAME"), (1, 1, "VALID"),
+    (3, 1, "SAME"), (3, 1, "VALID"),
+    (1, 2, "SAME"), (3, 2, "SAME"), (3, 2, "VALID"),
+]
+
+
+def _rand_int8(key, shape, scale=25):
+    return jnp.clip(jnp.round(jax.random.normal(key, shape) * scale),
+                    -127, 127).astype(jnp.int8)
+
+
+def _xla_conv(x, w, stride, padding):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _quant_w(w):
+    absmax = jnp.max(jnp.abs(w), axis=(0, 1, 2), keepdims=True)
+    scale = jnp.maximum(absmax, 1e-8) / 127.0
+    w_q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+    return w_q, scale
+
+
+# ---------------------------------------------------------------------------
+# 1. int8 conv kernel vs jax.lax.conv golden (ideal mode, f32 accumulation)
+# ---------------------------------------------------------------------------
+
+class TestCimConvGolden:
+    @pytest.mark.parametrize("k,stride,padding", SWEEP)
+    @pytest.mark.parametrize("c_in,c_out", [(20, 9), (33, 17)])
+    def test_ideal_matches_xla_conv(self, k, stride, padding, c_in, c_out):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(k * 7 + stride + c_in))
+        x = _rand_int8(k1, (2, 9, 9, c_in))
+        w = _rand_int8(k2, (k, k, c_in, c_out), scale=30)
+        got = cim_conv_pallas(x, w, cim_lib.CiMConfig(mode="ideal"),
+                              stride=stride, padding=padding, interpret=True)
+        want = _xla_conv(x.astype(jnp.float32), w.astype(jnp.float32),
+                         stride, padding)
+        assert got.shape == want.shape
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=0, atol=1e-4)
+
+    def test_im2col_model_matches_xla_conv(self):
+        """The core model itself agrees with lax.conv (not just the kernel)."""
+        k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+        x = _rand_int8(k1, (1, 11, 11, 13))
+        w = _rand_int8(k2, (3, 3, 13, 5), scale=30)
+        got = cim_lib.cim_conv_model(x, w, cim_lib.CiMConfig(mode="ideal"),
+                                     stride=2, padding="SAME")
+        want = _xla_conv(x.astype(jnp.float32), w.astype(jnp.float32),
+                         2, "SAME")
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# 2. int8 conv kernel vs core.cim fidelity modes
+# ---------------------------------------------------------------------------
+
+class TestCimConvFidelity:
+    @pytest.mark.parametrize("mode", ["ideal", "per_subarray", "bitserial"])
+    @pytest.mark.parametrize("k,stride,padding", [
+        (1, 1, "SAME"), (3, 1, "SAME"), (3, 2, "SAME"), (3, 2, "VALID"),
+    ])
+    def test_matches_core_model(self, mode, k, stride, padding):
+        cfg = cim_lib.CiMConfig(mode=mode)
+        k1, k2 = jax.random.split(jax.random.PRNGKey(k + stride))
+        x = _rand_int8(k1, (1, 8, 8, 20))
+        w = _rand_int8(k2, (k, k, 20, 9), scale=30)
+        got = cim_conv_pallas(x, w, cfg, stride=stride, padding=padding,
+                              interpret=True)
+        want = ref.cim_conv_ref(x, w, cfg, stride, padding)
+        # identical math; atol covers f32 sum-order inside the blocked pass
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=0.25)
+
+    def test_block_shape_invariance(self):
+        """Result must not depend on the BlockSpec tiling (subarray
+        boundaries align to global K offsets regardless of block_k)."""
+        cfg = cim_lib.CiMConfig(mode="per_subarray")
+        k1, k2 = jax.random.split(jax.random.PRNGKey(5))
+        x = _rand_int8(k1, (1, 8, 8, 40))            # R = 360: pads ragged
+        w = _rand_int8(k2, (3, 3, 40, 9), scale=30)
+        want = ref.cim_conv_ref(x, w, cfg, 1, "SAME")
+        for bm, bn, bk in [(64, 64, 128), (128, 128, 512), (32, 128, 256)]:
+            got = cim_conv_pallas(x, w, cfg, stride=1, padding="SAME",
+                                  block_m=bm, block_n=bn, block_k=bk,
+                                  interpret=True)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-5, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# 3. fused float-in kernels vs blocked-quant oracles
+# ---------------------------------------------------------------------------
+
+class TestFusedConv:
+    def _make(self, key, c_in=20, c_out=9, k=3, d=4, u_ratio=4):
+        ks = jax.random.split(key, 4)
+        x = jax.random.normal(ks[0], (2, 8, 8, c_in))
+        w = jax.random.normal(ks[1], (k, k, c_in, c_out)) / np.sqrt(
+            k * k * c_in)
+        w_q, w_scale = _quant_w(w)
+        c_c, c_u = max(1, c_in // d), max(1, c_out // u_ratio)
+        c = jax.random.normal(ks[2], (1, 1, c_in, c_c)) / np.sqrt(c_in)
+        core = jax.random.normal(ks[3], (k, k, c_c, c_u)) * 0.1
+        u = jax.random.normal(ks[0], (1, 1, c_u, c_out)) / np.sqrt(c_u)
+        return x, w_q, w_scale, c, core, u
+
+    @pytest.mark.parametrize("mode", ["ideal", "per_subarray"])
+    @pytest.mark.parametrize("stride,padding", [(1, "SAME"), (2, "SAME"),
+                                                (2, "VALID")])
+    def test_trunk_conv_matches_oracle(self, mode, stride, padding):
+        cfg = cim_lib.CiMConfig(mode=mode)
+        x, w_q, w_scale, *_ = self._make(jax.random.PRNGKey(stride))
+        got = trunk_conv_pallas(x, w_q, w_scale, cfg, stride=stride,
+                                padding=padding, interpret=True)
+        want = ref.trunk_conv_ref(x, w_q, w_scale, cfg, stride, padding)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("k", [1, 3])
+    @pytest.mark.parametrize("stride,padding", [(1, "SAME"), (2, "SAME"),
+                                                (1, "VALID"), (2, "VALID")])
+    def test_rebranch_conv_matches_oracle(self, k, stride, padding):
+        args = self._make(jax.random.PRNGKey(k * 10 + stride), k=k)
+        got = rebranch_conv_pallas(*args, stride=stride, padding=padding,
+                                   interpret=True)
+        want = ref.rebranch_conv_ref(*args, stride=stride, padding=padding)
+        assert got.shape == want.shape
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_rebranch_conv_ragged_channels(self):
+        """Non-multiple-of-block channel counts pad cleanly end to end."""
+        args = self._make(jax.random.PRNGKey(3), c_in=33, c_out=17)
+        got = rebranch_conv_pallas(*args, stride=2, interpret=True)
+        want = ref.rebranch_conv_ref(*args, stride=2)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_matches_unfused_layer_semantics(self):
+        """Fused kernel ~= models.cnn.apply_conv (different activation-quant
+        granularity: per-patch-row vs per-pixel, so tolerance is loose)."""
+        spec = rebranch.ReBranchSpec()
+        p = cnn.init_conv(jax.random.PRNGKey(0), 3, 32, 16, spec)
+        p["sram"]["core"] = jax.random.normal(
+            jax.random.PRNGKey(2), p["sram"]["core"].shape) * 0.05
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 32))
+        got = rebranch_conv_pallas(
+            x, p["rom"]["w_q"], p["rom"]["w_scale"], p["rom"]["C"],
+            p["sram"]["core"], p["rom"]["U"], stride=1, interpret=True)
+        want = cnn.apply_conv(p, x, spec, stride=1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=0.05, atol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# 4. dispatch + STE gradient path
+# ---------------------------------------------------------------------------
+
+class TestConvDispatch:
+    def _layer(self, key, c_in=20, c_out=12):
+        spec = rebranch.ReBranchSpec()
+        p = cnn.init_conv(key, 3, c_in, c_out, spec)
+        x = jax.random.normal(jax.random.fold_in(key, 1), (2, 6, 6, c_in))
+        return p, x
+
+    @pytest.mark.parametrize("impl", ["int8_native", "dequant", "pallas"])
+    def test_trunk_impls_agree(self, impl):
+        p, x = self._layer(jax.random.PRNGKey(0))
+        spec = dataclasses.replace(rebranch.ReBranchSpec(), trunk_impl=impl)
+        y = cnn.apply_conv(p, x, spec, stride=2)
+        ref_out = cnn.apply_conv(p, x, rebranch.ReBranchSpec(), stride=2)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref_out),
+                                   rtol=0.05, atol=0.05)
+
+    @pytest.mark.parametrize("path", ["pallas", "int8_native"])
+    @pytest.mark.parametrize("stride", [1, 2])
+    def test_trunk_conv_backward_is_ste(self, path, stride):
+        """dx through the frozen trunk equals the vjp of the dequantised
+        XLA conv (conv is linear in x, so grad is x-independent)."""
+        p, x = self._layer(jax.random.PRNGKey(4))
+        w_q, w_scale = p["rom"]["w_q"], p["rom"]["w_scale"]
+        cfg = cim_lib.CiMConfig(mode="ideal")
+        op = ops.trunk_conv if path == "pallas" else rebranch.trunk_conv
+
+        def f(x):
+            return jnp.sum(op(cfg, stride, "SAME", x, w_q, w_scale))
+
+        dx = jax.grad(f)(x)
+        w_deq = w_q.astype(jnp.float32) * w_scale.astype(jnp.float32)
+
+        def golden(x):
+            return jnp.sum(_xla_conv(x, w_deq, stride, "SAME"))
+
+        want = jax.grad(golden)(x)
+        np.testing.assert_allclose(np.asarray(dx), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_gradients_flow_to_branch_core_only(self):
+        """Under every impl, d(loss)/d(core) is nonzero and no ROM grads
+        exist (partition() strips them)."""
+        for impl in ["int8_native", "pallas"]:
+            spec = dataclasses.replace(rebranch.ReBranchSpec(),
+                                       trunk_impl=impl)
+            p, x = self._layer(jax.random.PRNGKey(6))
+            t, f = rebranch.partition(p)
+
+            def loss(t):
+                y = cnn.apply_conv(rebranch.combine(t, f), x, spec)
+                return jnp.sum(y ** 2)
+
+            g = jax.grad(loss)(t)
+            assert float(jnp.sum(jnp.abs(g["sram"]["core"]))) > 0, impl
+
+    def test_jit_and_vmap_safe(self):
+        """The pallas conv path works under jit (models wrap it in jit'd
+        train steps)."""
+        p, x = self._layer(jax.random.PRNGKey(7))
+        spec = dataclasses.replace(rebranch.ReBranchSpec(),
+                                   trunk_impl="pallas")
+        y = jax.jit(lambda x: cnn.apply_conv(p, x, spec))(x)
+        assert bool(jnp.all(jnp.isfinite(y)))

@@ -106,12 +106,16 @@ def test_int8_compressed_allreduce_matches_plain():
         from functools import partial
         from jax.sharding import PartitionSpec as P
         from repro.optim import compress
+        try:
+            shard_map = jax.shard_map
+        except AttributeError:              # jax < 0.5: experimental home
+            from jax.experimental.shard_map import shard_map
 
         mesh = jax.make_mesh((8,), ('data',))
         g = jax.random.normal(jax.random.PRNGKey(0), (8, 64)) * 1e-3
         err = jnp.zeros((8, 64))
 
-        @partial(jax.shard_map, mesh=mesh,
+        @partial(shard_map, mesh=mesh,
                  in_specs=(P('data'), P('data')),
                  out_specs=(P('data'), P('data')))
         def compressed(gs, es):

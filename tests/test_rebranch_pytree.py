@@ -1,0 +1,134 @@
+"""Regression tests for the ROM/SRAM pytree machinery.
+
+partition/combine were only exercised on flat layer dicts; freeze_to_rom
+on conv trees only implicitly through the transfer harness.  These pin the
+contracts down on mixed dict/list/tuple nesting and on real conv pytrees.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rebranch
+from repro.models import cnn
+
+SPEC = rebranch.ReBranchSpec()
+
+
+def _tree_equal(a, b):
+    assert jax.tree.structure(a) == jax.tree.structure(b)
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+class TestPartitionCombine:
+    def _mixed_tree(self):
+        key = jax.random.PRNGKey(0)
+        return {
+            "blocks": [                                     # list of dicts
+                rebranch.init_linear(jax.random.fold_in(key, 0), 16, 8, SPEC),
+                {"inner": (                                 # tuple nesting
+                    rebranch.init_linear(jax.random.fold_in(key, 1), 8, 8,
+                                         SPEC),
+                    {"sram": {"w": jnp.ones((4, 4))}},      # plain trainable
+                )},
+            ],
+            "head": {"sram": {"w": jnp.zeros((8, 2)),
+                              "b": jnp.zeros((2,))}},
+            "scalar_meta": jnp.float32(1.0),                # bare leaf
+        }
+
+    def test_roundtrip_on_mixed_pytree(self):
+        p = self._mixed_tree()
+        t, f = rebranch.partition(p)
+        _tree_equal(rebranch.combine(t, f), p)
+
+    def test_partition_preserves_container_types(self):
+        p = self._mixed_tree()
+        t, f = rebranch.partition(p)
+        assert isinstance(t["blocks"], list) and isinstance(f["blocks"], list)
+        assert isinstance(t["blocks"][1]["inner"], tuple)
+        assert isinstance(f["blocks"][1]["inner"], tuple)
+
+    def test_rom_goes_frozen_sram_goes_trainable(self):
+        p = self._mixed_tree()
+        t, f = rebranch.partition(p)
+        blk = p["blocks"][0]
+        tb, fb = t["blocks"][0], f["blocks"][0]
+        assert tb["rom"]["w_q"] is None and fb["rom"]["w_q"] is not None
+        assert tb["sram"]["core"] is not None and fb["sram"]["core"] is None
+        # the bare leaf outside any rom/ subtree is trainable
+        assert t["scalar_meta"] is not None and f["scalar_meta"] is None
+        del blk
+
+    def test_namedtuple_nodes_are_rebuilt(self):
+        import collections
+        Pair = collections.namedtuple("Pair", ["a", "b"])
+        p = {"rom": {"x": jnp.ones((2,))},
+             "pair": Pair(jnp.zeros((3,)), jnp.ones((3,)))}
+        t, f = rebranch.partition(p)
+        assert isinstance(t["pair"], Pair) and isinstance(f["pair"], Pair)
+        _tree_equal(rebranch.combine(t, f), p)
+
+    def test_tuple_subclass_leaves_stay_leaves(self):
+        """jax.sharding.PartitionSpec subclasses tuple but is a pytree LEAF;
+        partition() must pass it through intact (regression: it used to be
+        rebuilt as PartitionSpec(<generator>), breaking sharding trees)."""
+        from jax.sharding import PartitionSpec as P
+        tree = {"rom": {"w": P("model", None)}, "sram": {"w": P(None)}}
+        t, f = rebranch.partition(tree)
+        assert f["rom"]["w"] == P("model", None) and t["rom"]["w"] is None
+        assert t["sram"]["w"] == P(None) and f["sram"]["w"] is None
+        _tree_equal_structs = rebranch.combine(t, f)
+        assert _tree_equal_structs["rom"]["w"] == P("model", None)
+
+    def test_counts_are_disjoint_and_complete(self):
+        p = self._mixed_tree()
+        total = sum(x.size for x in jax.tree.leaves(p))
+        assert (rebranch.trainable_count(p)
+                + rebranch.frozen_count(p)) == total
+
+
+class TestFreezeToRomConv:
+    def _dense_cnn(self):
+        """A mini conv tree the way pretraining leaves it: plain convs
+        ({'sram': {'w': 4-D}}) mixed with BN and a dense head."""
+        key = jax.random.PRNGKey(3)
+        mk = lambda i, shape: {"sram": {"w": jax.random.normal(
+            jax.random.fold_in(key, i), shape) / np.sqrt(np.prod(shape[:-1]))}}
+        return {
+            "convs": [mk(0, (3, 3, 3, 16)), mk(1, (1, 1, 16, 16))],
+            "bns": [{"sram": {"scale": jnp.ones((16,)),
+                              "bias": jnp.zeros((16,))}}],
+            "fc": {"sram": {"w": jax.random.normal(
+                jax.random.fold_in(key, 9), (16, 10)) * 0.01}},
+        }
+
+    def test_convs_become_rebranch_dense_stays(self):
+        p = cnn.freeze_to_rom(self._dense_cnn(), jax.random.PRNGKey(1), SPEC)
+        for conv in p["convs"]:
+            assert "rom" in conv and conv["rom"]["w_q"].dtype == jnp.int8
+            assert conv["rom"]["w_q"].ndim == 4
+            assert "core" in conv["sram"]
+        # dense head and BN untouched (stay pure SRAM)
+        assert set(p["fc"].keys()) == {"sram"}
+        assert set(p["bns"][0].keys()) == {"sram"}
+
+    def test_frozen_conv_preserves_function(self):
+        dense = self._dense_cnn()
+        p = cnn.freeze_to_rom(dense, jax.random.PRNGKey(1), SPEC)
+        x = jax.random.normal(jax.random.PRNGKey(2), (2, 8, 8, 3))
+        want = jax.lax.conv_general_dilated(
+            x, dense["convs"][0]["sram"]["w"], (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        got = cnn.apply_conv(p["convs"][0], x, SPEC)
+        # zero-init core: output is the int8-quantised trunk alone
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=0.06, atol=0.06)
+
+    def test_partition_roundtrip_on_frozen_conv_tree(self):
+        p = cnn.freeze_to_rom(self._dense_cnn(), jax.random.PRNGKey(1), SPEC)
+        t, f = rebranch.partition(p)
+        _tree_equal(rebranch.combine(t, f), p)
+        # the ROM trunk dominates the parameter bytes (paper's premise)
+        assert rebranch.frozen_count(p) > rebranch.trainable_count(p)
