@@ -79,6 +79,21 @@ def bench_layer(c_in: int, c_out: int, k: int, hw: int, batch: int,
     return out
 
 
+def run() -> list[str]:
+    """benchmarks.run section: a fast 2-layer DarkNet-19 slice at 32px
+    (interpret mode off-TPU — relative numbers only; use main() on TPU
+    for the real comparison)."""
+    key = jax.random.PRNGKey(0)
+    lines = []
+    for i, (c_in, c_out, k, hw) in enumerate(darknet_layer_shapes(32, 2)):
+        times = bench_layer(c_in, c_out, k, hw, batch=1, repeat=1,
+                            key=jax.random.fold_in(key, i))
+        for impl, ms in times.items():
+            lines.append(f"conv_kernel_l{i}_{impl},{ms * 1e3:.0f},"
+                         f"cin={c_in} cout={c_out} k={k} hw={hw}")
+    return lines
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--size", type=int, default=104,

@@ -26,11 +26,10 @@ ICI_BW = 50e9                # bytes/s / link (per chip, ring neighbour)
 
 
 def model_params_and_active(arch: str) -> tuple[float, float]:
-    from repro import configs
-    from repro.models import api
+    from repro import configs, deploy
     import jax
     cfg = configs.get(arch)
-    shapes = jax.eval_shape(lambda k: api.init(k, cfg),
+    shapes = jax.eval_shape(deploy.compile_model(cfg).init,
                             jax.random.PRNGKey(0))
     total = sum(l.size for l in jax.tree.leaves(shapes))
     if cfg.family == "moe":

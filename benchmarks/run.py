@@ -12,8 +12,9 @@ import sys
 def main() -> None:
     fast = "--fast" in sys.argv
     from benchmarks import (table1_macro, fig12_area_map,
-                            fig14_system_energy, roofline)
-    sections = [table1_macro, fig12_area_map, fig14_system_energy]
+                            fig14_system_energy, conv_kernel, roofline)
+    sections = [table1_macro, fig12_area_map, fig14_system_energy,
+                conv_kernel]
     if not fast:
         from benchmarks import fig10_generalization, fig11_du_sweep
         sections[1:1] = [fig10_generalization, fig11_du_sweep]

@@ -4,6 +4,8 @@
 2. Show the CiM fidelity modes (ideal / per-subarray / bit-serial ADC).
 3. Train ONLY the branch to adapt the frozen trunk to a new target.
 4. Show the Pallas CiM kernel agreeing with the pure-jnp oracle.
+5. Compile a whole model with `repro.deploy.compile_model`: pick a
+   TrunkEngine from the registry and map ROM vs SRAM per layer.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -14,9 +16,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import deploy, engine
 from repro.core import cim, quant, rebranch, rom
 from repro.kernels.cim_matmul import cim_matmul_pallas
 from repro.kernels import ref
+from repro.models import cnn
 
 key = jax.random.PRNGKey(0)
 
@@ -75,3 +79,23 @@ got = cim_matmul_pallas(x_q, w_q, cfg, interpret=True)
 want = ref.cim_matmul_ref(x_q, w_q, cfg)
 print("\nPallas CiM kernel vs oracle max |err|:",
       float(jnp.max(jnp.abs(got - want))))
+
+# -- 5. compile a model: engine registry + per-layer ROM/SRAM mapping ---------
+# every frozen trunk dispatches through a named TrunkEngine; resolution is
+# strict (typos raise with the registered set) and new backends plug in
+# with engine.register(...) — no model code changes.
+print("\nregistered engines:", engine.registered_names())
+
+model = deploy.compile_model(
+    cnn.CNNConfig(name="vgg8", input_size=32),
+    engine="int8_native",
+    layer_overrides={
+        "convs.0": {"memory": "sram"},      # first conv stays trainable
+        "convs.5": {"engine": "dequant"},   # last conv on the float baseline
+    })
+print("compiled:", model)
+p_cnn = model.init(jax.random.PRNGKey(0))
+img = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 3))
+print("vgg8 logits:", model.forward(p_cnn, img).shape,
+      "| conv0 in SRAM:", "rom" not in p_cnn["convs"][0],
+      "| conv5 engine:", model.layer_spec("convs.5").trunk_impl)

@@ -10,9 +10,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro import configs
+from repro import configs, deploy
 from repro.launch import steps as steps_lib
-from repro.models import api
 
 ARCH = "gemma_2b"
 BATCH, PROMPT, GEN = 4, 32, 16
@@ -20,20 +19,19 @@ BATCH, PROMPT, GEN = 4, 32, 16
 
 def main():
     cfg = configs.get_smoke(ARCH)
+    model = deploy.compile_model(cfg)   # one compile, whole serve surface
     key = jax.random.PRNGKey(0)
-    params = api.init(key, cfg)
+    params = model.init(key)
 
     prompt = jax.random.randint(key, (BATCH, PROMPT), 0, cfg.vocab_size)
-    cache = api.init_cache(cfg, BATCH, PROMPT + GEN, dtype=jnp.float32)
+    cache = model.init_cache(BATCH, PROMPT + GEN, dtype=jnp.float32)
 
     t0 = time.time()
-    logits, cache = jax.jit(
-        lambda p, b, c: api.prefill(p, b, cfg, c))(params,
-                                                   {"tokens": prompt}, cache)
+    logits, cache = jax.jit(model.prefill)(params, {"tokens": prompt}, cache)
     tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     print(f"prefill {BATCH}x{PROMPT}: {(time.time()-t0)*1e3:.0f} ms")
 
-    serve_step = jax.jit(steps_lib.make_serve_step(cfg))
+    serve_step = jax.jit(steps_lib.make_serve_step(cfg, model=model))
     out = [tok]
     t0 = time.time()
     for _ in range(GEN - 1):

@@ -1,12 +1,14 @@
 """The paper's detection workload on the CiM conv kernels, end to end.
 
-1. Build Tiny-YOLO (DarkNet-style backbone + YOLO head) with ReBranch
-   convs: int8 trunks in ROM, 1/16-size trainable branches in SRAM.
-2. Run the same forward under all three trunk dispatches
-   (int8_native / dequant / pallas) and show they agree.
+1. Compile Tiny-YOLO (DarkNet-style backbone + YOLO head) with
+   `deploy.compile_model`: int8 trunks in ROM, 1/16-size trainable
+   branches in SRAM.
+2. Recompile the SAME network for each registered TrunkEngine
+   (int8_native / dequant / pallas) and show the forwards agree.
 3. Drop the CiM fidelity to the 5-bit-ADC per-subarray model and show the
    detection head barely moves (the paper's central claim).
-4. Show the fused trunk+compress conv kernel against the unfused layer.
+4. Show the fused trunk+compress conv kernel against the unfused layer,
+   and BN+leaky-ReLU folded into the engine's conv epilogue.
 
 Run:  PYTHONPATH=src python examples/yolo_cim_conv.py
 (CPU-friendly: 64x64 input; the real model runs 416x416.)
@@ -17,15 +19,17 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro import deploy
 from repro.core import cim, rebranch
 from repro.kernels import ops
 from repro.models import cnn
 
 SIZE = 64
 cfg = cnn.CNNConfig(name="tiny_yolo", input_size=SIZE)
+model = deploy.compile_model(cfg)
 
 key = jax.random.PRNGKey(0)
-params = cnn.init_tiny_yolo(key, cfg)
+params = model.init(key)
 x = jax.random.normal(jax.random.PRNGKey(1), (1, SIZE, SIZE, 3))
 
 n_sram = rebranch.trainable_count(params)
@@ -33,13 +37,12 @@ n_rom = rebranch.frozen_count(params)
 print(f"Tiny-YOLO @ {SIZE}px — ROM params: {n_rom:,}  "
       f"SRAM params: {n_sram:,}  ({n_rom / (n_rom + n_sram):.1%} in ROM)")
 
-# -- 2. one forward per trunk dispatch ---------------------------------------
+# -- 2. one forward per engine (same params, recompiled mapping) -------------
 outs = {}
 for impl in ("int8_native", "dequant", "pallas"):
-    c = dataclasses.replace(
-        cfg, rebranch=dataclasses.replace(cfg.rebranch, trunk_impl=impl))
-    outs[impl] = cnn.apply_darknet(params, x, c)
-    print(f"trunk_impl={impl:12s} head: {outs[impl].shape} "
+    m = deploy.compile_model(cfg, engine=impl)
+    outs[impl] = m.forward(params, x)
+    print(f"engine={impl:12s} head: {outs[impl].shape} "
           f"finite: {bool(jnp.all(jnp.isfinite(outs[impl])))}")
 for impl in ("dequant", "pallas"):
     d = float(jnp.max(jnp.abs(outs[impl] - outs["int8_native"])))
@@ -48,15 +51,16 @@ for impl in ("dequant", "pallas"):
 
 # -- 3. 5-bit ADC fidelity ---------------------------------------------------
 for mode in ("per_subarray", "bitserial"):
-    c = dataclasses.replace(cfg, rebranch=dataclasses.replace(
-        cfg.rebranch, cim=cim.CiMConfig(mode=mode)))
-    y = cnn.apply_darknet(params, x, c)
+    m = deploy.compile_model(dataclasses.replace(
+        cfg, rebranch=dataclasses.replace(cfg.rebranch,
+                                          cim=cim.CiMConfig(mode=mode))))
+    y = m.forward(params, x)
     rel = float(jnp.mean(jnp.abs(y - outs["int8_native"]))
                 / (jnp.std(outs["int8_native"]) + 1e-9))
     print(f"CiM mode {mode:13s}: mean |err| = {rel:.4f} of head std "
           f"(5-bit ADC)")
 
-# -- 4. fused trunk+compress kernel ------------------------------------------
+# -- 4. fused trunk+compress kernel + fused BN/act epilogue ------------------
 p0 = params["convs"][2]                     # a mid-backbone 3x3 conv
 x0 = jax.random.normal(jax.random.PRNGKey(2), (1, 16, 16, 32))
 fused = ops.rebranch_conv(x0, p0["rom"]["w_q"], p0["rom"]["w_scale"],
@@ -64,3 +68,8 @@ fused = ops.rebranch_conv(x0, p0["rom"]["w_q"], p0["rom"]["w_scale"],
 unfused = cnn.apply_conv(p0, x0, cfg.rebranch)
 print("\nfused rebranch_conv vs unfused layer max |err|:",
       float(jnp.max(jnp.abs(fused - unfused))))
+
+y_fused_bn = cnn.apply_darknet(params, x,
+                               dataclasses.replace(cfg, fuse_bn_act=True))
+print("BN+leaky folded into conv epilogue vs unfused max |err|:",
+      float(jnp.max(jnp.abs(y_fused_bn - outs["int8_native"]))))

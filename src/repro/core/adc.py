@@ -1,0 +1,60 @@
+"""The 5-bit ADC transfer functions of the ROM-CiM macro (paper §3.1).
+
+One home for the analogue-to-digital math that every CiM execution path
+shares: the pure-jnp macro model (core.cim) and the Pallas kernels
+(kernels.cim_matmul, and through its ``cim_block_dot`` the fused conv
+kernels in kernels.rebranch_conv) all import THESE functions, so the
+comparator-threshold convention can never drift between model and kernel.
+
+Everything here is plain jnp on values already resident in registers /
+VMEM — safe both at the XLA level and inside a Pallas kernel body.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Comparator thresholds are deterministic and biased a hair below the
+# half-step, so integer counts landing exactly on a half boundary resolve
+# identically in every implementation (model & kernel float pipelines).
+THRESHOLD_BIAS = 1e-3
+
+
+def adc_transfer(psum: jax.Array, full_range, cfg) -> jax.Array:
+    """5-bit ADC: quantise a non-negative analogue count to 2^B levels.
+
+    The bit line is pre-charged and discharged by conducting cells, so the
+    quantity sensed is a count in [0, full_range] (scalar or per-column
+    array — ROM contents are tape-out-known, so references are per-column);
+    the ADC maps it to ``cfg.adc_levels`` uniform steps, clipping above
+    the engineered range.
+    """
+    rng = full_range * cfg.adc_range_frac
+    lsb = rng / cfg.adc_levels
+    code = jnp.clip(jnp.round(psum / lsb + THRESHOLD_BIAS),
+                    0, cfg.adc_levels)
+    return code * lsb
+
+
+def signed_adc(psum: jax.Array, full_range, cfg) -> jax.Array:
+    """ADC transfer for signed per-subarray partial sums (per_subarray mode).
+
+    Differential sensing (positive/negative weight columns) yields a signed
+    swing of +-full_range digitised by the same 2^B-level ADC.
+    """
+    rng = full_range * cfg.psum_range_frac
+    half_levels = cfg.adc_levels / 2.0
+    lsb = rng / half_levels
+    code = jnp.clip(jnp.round(psum / lsb + THRESHOLD_BIAS),
+                    -half_levels, half_levels)
+    return code * lsb
+
+
+def bitserial_planes(cfg) -> tuple[int, int, int]:
+    """(weight magnitude bit planes, activation pulse groups, group max)
+    for the differential bit-serial decomposition — shared by the model
+    and the kernel so both iterate the exact same plane set."""
+    mag_bits = cfg.weight_bits - 1              # |w| <= 127 -> 7 planes
+    act_groups = -(-(cfg.act_bits - 1) // cfg.act_group_bits)
+    return mag_bits, act_groups, cfg.group_max

@@ -28,6 +28,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core import adc as adc_lib
+
 
 @dataclasses.dataclass(frozen=True)
 class CiMConfig:
@@ -61,35 +63,10 @@ class CiMConfig:
 DEFAULT_CIM = CiMConfig()
 
 
-def adc_transfer(psum: jax.Array, full_range, cfg: CiMConfig) -> jax.Array:
-    """5-bit ADC: quantise a non-negative analogue count to 2^B levels.
-
-    The bit line is pre-charged and discharged by conducting cells, so the
-    quantity sensed is a count in [0, full_range] (scalar or per-column
-    array — ROM contents are tape-out-known, so references are per-column);
-    the ADC maps it to ``adc_levels`` uniform steps, clipping above the
-    engineered range.
-    """
-    rng = full_range * cfg.adc_range_frac
-    lsb = rng / cfg.adc_levels
-    # +1e-3: comparator thresholds are deterministic and biased a hair
-    # below the half-step, so integer counts landing exactly on a half
-    # boundary resolve identically in every implementation (model & kernel).
-    code = jnp.clip(jnp.round(psum / lsb + 1e-3), 0, cfg.adc_levels)
-    return code * lsb
-
-
-def _signed_adc(psum: jax.Array, full_range: float, cfg: CiMConfig) -> jax.Array:
-    """ADC transfer for signed per-subarray partial sums (per_subarray mode).
-
-    Differential sensing (positive/negative weight columns) yields a signed
-    swing of +-full_range digitised by the same 2^B-level ADC.
-    """
-    rng = full_range * cfg.psum_range_frac
-    half_levels = cfg.adc_levels / 2.0
-    lsb = rng / half_levels
-    code = jnp.clip(jnp.round(psum / lsb + 1e-3), -half_levels, half_levels)
-    return code * lsb
+# ADC transfer functions live in core.adc (shared verbatim with the Pallas
+# kernels); re-exported here for callers/tests that address them as cim.*.
+adc_transfer = adc_lib.adc_transfer
+_signed_adc = adc_lib.signed_adc
 
 
 def _pad_to_subarrays(a_q: jax.Array, w_q: jax.Array, rows: int):
@@ -165,9 +142,7 @@ def _bitserial_model(a_q, w_q, cfg: CiMConfig) -> jax.Array:
     a_split = (jnp.maximum(a_i, 0), jnp.maximum(-a_i, 0))
     w_split = (jnp.maximum(w_i, 0), jnp.maximum(-w_i, 0))
 
-    group_max = cfg.group_max
-    mag_bits = cfg.weight_bits - 1             # |w| <= 127 -> 7 planes
-    act_groups = -(-(cfg.act_bits - 1) // cfg.act_group_bits)
+    mag_bits, act_groups, group_max = adc_lib.bitserial_planes(cfg)
 
     acc = jnp.zeros((*batch, n), jnp.float32)
     for sa, a_part in enumerate(a_split):

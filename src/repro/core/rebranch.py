@@ -36,8 +36,11 @@ ROM_KEY = "rom"
 class ReBranchSpec:
     d_ratio: int = 4                 # compression ratio D (paper Fig. 11)
     u_ratio: int = 4                 # decompression ratio U
-    enabled: bool = True             # False -> plain trainable linear
-    trunk_impl: str = "int8_native"  # 'int8_native' | 'dequant' | 'pallas'
+    enabled: bool = True             # False -> plain trainable linear ("SRAM")
+    # Trunk execution backend: any name in the repro.engine registry
+    # ('int8_native' | 'dequant' | 'pallas' out of the box).  Resolution
+    # is strict — unknown names raise with the registered set.
+    trunk_impl: str = "int8_native"
     cim: cim_lib.CiMConfig = dataclasses.field(
         default_factory=lambda: cim_lib.CiMConfig(mode="ideal"))
     param_dtype: Any = jnp.float32   # branch/scale dtype
@@ -211,6 +214,14 @@ def trunk_matmul_dequant(cfg, x, w_q, w_scale):
     return x_hq @ w
 
 
+def trunk_conv_dequant(cfg, stride: int, padding: str, x, w_q, w_scale):
+    """Conv analogue of :func:`trunk_matmul_dequant`: dequantised weights +
+    fake-quantised activations on a plain XLA conv (STE built in)."""
+    del cfg
+    w = w_q.astype(x.dtype) * w_scale.astype(x.dtype)
+    return conv_nhwc(quant.fake_quant_ste(x), w, stride, padding)
+
+
 # ---------------------------------------------------------------------------
 # ReBranch linear layer
 # ---------------------------------------------------------------------------
@@ -271,13 +282,10 @@ def apply_linear(params, x, spec: ReBranchSpec, t1_axes=None,
         return y if b is None else y + b.astype(x.dtype)
 
     rom, sram = params["rom"], params["sram"]
-    if spec.trunk_impl == "dequant":
-        y = trunk_matmul_dequant(spec.cim, x, rom["w_q"], rom["w_scale"])
-    elif spec.trunk_impl == "pallas":
-        from repro.kernels import ops as kops  # deferred: optional dep
-        y = kops.trunk_matmul_pallas(spec.cim, x, rom["w_q"], rom["w_scale"])
-    else:
-        y = trunk_matmul(spec.cim, out_axes, x, rom["w_q"], rom["w_scale"])
+    from repro import engine as engine_lib   # deferred: avoids import cycle
+    eng = engine_lib.resolve(spec)           # strict + capability-gated
+    y = eng.matmul(spec.cim, x, rom["w_q"], rom["w_scale"],
+                   out_axes=out_axes)
 
     if spec.branch_enabled and "core" in sram:
         c = rom["C"].astype(x.dtype)

@@ -1,0 +1,235 @@
+"""`compile_model`: the one deployment entrypoint for every CiM model.
+
+YOLoC deploys ONE network across heterogeneous substrates: most layers
+frozen in ROM-CiM, a few (first/last, heads) kept SRAM-trainable, each
+mapped per layer (paper §4, Fig. 12 area map).  ``compile_model`` is
+where that mapping is decided:
+
+    from repro import deploy
+    model = deploy.compile_model(
+        cfg,                       # ArchConfig (LMs) or cnn.CNNConfig
+        engine="pallas",          # registry name or TrunkEngine instance
+        layer_overrides={
+            "convs.0": {"memory": "sram"},    # stem stays trainable
+            "lm_head": {"memory": "sram"},    # readout stays trainable
+            "blocks":  {"engine": "int8_native",
+                         "cim": "per_subarray"},
+        })
+    params = model.init(key)
+    logits = model.forward(params, batch)
+
+It resolves the engine through the ``repro.engine`` registry (strict,
+capability-gated), folds the per-layer override map into the config's
+``rebranch_overrides`` (consumed by ``config.spec_for`` at each named
+site), and returns a :class:`CompiledModel` bundling
+init / forward / prefill / decode_step / init_cache (plus features /
+apply_head for the chunked-loss training path).  Everything is resolved
+at compile time — the returned closures contain no string dispatch — and
+the config it produces is a frozen dataclass, safe as a jit static.
+
+Override keys: ``engine`` (registry name), ``memory`` ('rom' freezes the
+trunk, 'sram' keeps a plain trainable layer), ``cim`` (a CiMConfig or a
+fidelity-mode string), ``branch_enabled``, ``d_ratio``, ``u_ratio``.
+A full ``ReBranchSpec`` is also accepted verbatim.
+
+The free functions in ``repro.models.api`` remain as thin deprecation
+shims for existing callers; new code should compile once and reuse.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro import engine as engine_lib
+from repro.core import cim as cim_lib
+from repro.core.rebranch import ReBranchSpec
+from repro.engine.base import TrunkEngine
+from repro.models import api, cnn
+from repro.models.config import spec_for
+
+_OVERRIDE_KEYS = ("engine", "memory", "cim", "branch_enabled",
+                  "d_ratio", "u_ratio")
+
+
+def valid_sites(cfg) -> set | None:
+    """The site names ``layer_overrides`` may address for this config.
+
+    Returns the exact set a model consults through ``config.spec_for``
+    (typos and unwired sites are rejected by compile_model instead of
+    silently doing nothing).  ``None`` means unconstrained (a model
+    registered outside this module whose sites we cannot enumerate);
+    an empty set means the family has no per-site mapping wired yet
+    (ssm / hybrid — the config-wide spec still applies).
+    """
+    if isinstance(cfg, cnn.CNNConfig):
+        return cnn.override_sites(cfg)      # co-located with the builders
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        sites = {"blocks"}
+        if cfg.num_codebooks:
+            sites.add("codebook_head")
+        elif not cfg.tie_embeddings:
+            sites.add("lm_head")
+        return sites
+    return set()        # ssm / hybrid: per-site mapping not wired yet
+
+
+def _normalize_override(base: ReBranchSpec, site: str, ov) -> ReBranchSpec:
+    """One layer_overrides entry -> a concrete ReBranchSpec."""
+    if isinstance(ov, ReBranchSpec):
+        return ov
+    if not isinstance(ov, dict):
+        raise TypeError(
+            f"layer_overrides[{site!r}] must be a dict or ReBranchSpec, "
+            f"got {type(ov).__name__}")
+    unknown = sorted(set(ov) - set(_OVERRIDE_KEYS))
+    if unknown:
+        raise ValueError(
+            f"layer_overrides[{site!r}]: unknown keys {unknown} "
+            f"(valid: {list(_OVERRIDE_KEYS)})")
+    rep: dict[str, Any] = {}
+    if "engine" in ov:
+        rep["trunk_impl"] = (ov["engine"].name
+                             if isinstance(ov["engine"], TrunkEngine)
+                             else ov["engine"])
+    if "memory" in ov:
+        if ov["memory"] not in ("rom", "sram"):
+            raise ValueError(
+                f"layer_overrides[{site!r}]: memory must be 'rom' or "
+                f"'sram', got {ov['memory']!r}")
+        rep["enabled"] = ov["memory"] == "rom"
+    if "cim" in ov:
+        c = ov["cim"]
+        rep["cim"] = (c if isinstance(c, cim_lib.CiMConfig)
+                      else dataclasses.replace(base.cim, mode=c))
+    for k in ("branch_enabled", "d_ratio", "u_ratio"):
+        if k in ov:
+            rep[k] = ov[k]
+    return dataclasses.replace(base, **rep)
+
+
+class CompiledModel:
+    """A model bound to its resolved engine(s) and per-layer mapping.
+
+    Thin, stateless closures over a fully-resolved config: safe to build
+    once and call from jit'd steps (the config is hashable/static).  LM
+    configs (ArchConfig) expose the full serve surface; CNN configs
+    (cnn.CNNConfig) expose init/forward (there is no KV cache to manage).
+    """
+
+    def __init__(self, cfg, engine: TrunkEngine):
+        self.cfg = cfg
+        self.engine = engine
+        self._is_cnn = isinstance(cfg, cnn.CNNConfig)
+        if self._is_cnn:
+            self._cnn_init, self._cnn_apply = cnn.MODEL_REGISTRY[cfg.name]
+
+    # -- mapping introspection ------------------------------------------
+    def layer_spec(self, site: str) -> ReBranchSpec:
+        """The ReBranchSpec governing a named site under this mapping."""
+        return spec_for(self.cfg, site)
+
+    # -- the model surface ----------------------------------------------
+    def init(self, key):
+        if self._is_cnn:
+            return self._cnn_init(key, self.cfg)
+        return api.init(key, self.cfg)
+
+    def forward(self, params, batch):
+        """Train-time forward: logits for LMs, head output for CNNs
+        (batch is the token dict for LMs, the NHWC image for CNNs)."""
+        if self._is_cnn:
+            return self._cnn_apply(params, batch, self.cfg)
+        return api.forward(params, batch, self.cfg)
+
+    def features(self, params, batch):
+        self._lm_only("features")
+        return api.features(params, batch, self.cfg)
+
+    def apply_head(self, params, x):
+        self._lm_only("apply_head")
+        return api.apply_head(params, x, self.cfg)
+
+    def prefill(self, params, batch, cache):
+        self._lm_only("prefill")
+        return api.prefill(params, batch, self.cfg, cache)
+
+    def decode_step(self, params, tokens, cache):
+        self._lm_only("decode_step")
+        return api.decode_step(params, tokens, self.cfg, cache)
+
+    def init_cache(self, batch: int, max_len: int, dtype=None):
+        self._lm_only("init_cache")
+        return api.init_cache(self.cfg, batch, max_len, dtype)
+
+    def _lm_only(self, what: str):
+        if self._is_cnn:
+            raise NotImplementedError(
+                f"{what}() is for autoregressive LMs; CNN configs "
+                f"({self.cfg.name!r}) expose init/forward only")
+
+    def __repr__(self):
+        kind = "cnn" if self._is_cnn else self.cfg.family
+        n_over = len(getattr(self.cfg, "rebranch_overrides", ()))
+        return (f"<CompiledModel {self.cfg.name!r} ({kind}) "
+                f"engine={self.engine.name!r} overrides={n_over}>")
+
+
+def compile_model(cfg, *, engine=None, layer_overrides=None) -> CompiledModel:
+    """Resolve engines + per-layer ROM/SRAM mapping and bundle the model.
+
+    cfg: ArchConfig (any LM family) or models.cnn.CNNConfig.
+    engine: registry name or TrunkEngine instance overriding the
+        config-wide ``cfg.rebranch.trunk_impl``; None keeps the config's.
+    layer_overrides: {site: override} map — see the module docstring for
+        keys and site names ('lm_head'/'codebook_head'/'blocks' for LMs;
+        'convs.N' / 'stem' / 'stages.S.B.convK' / 'head.N' for the CNNs;
+        :func:`valid_sites` enumerates them and unknown sites raise).
+        Values may also be full ReBranchSpec instances.
+
+    Every engine named anywhere in the mapping is resolved through the
+    strict registry NOW — unknown engines and unsupported fidelity modes
+    fail here, not mid-trace.
+    """
+    base = cfg.rebranch
+    if engine is not None:
+        name = engine.name if isinstance(engine, TrunkEngine) else engine
+        if isinstance(engine, TrunkEngine):
+            # Instance given: it must BE the registry entry for its name
+            # (layers re-resolve by name at trace time, so silently
+            # replacing the entry would swap the engine under every other
+            # compiled model).  Unregistered names are added; conflicts
+            # must be resolved explicitly by the caller.
+            if name not in engine_lib.registered_names():
+                engine_lib.register(name, engine)
+            elif engine_lib.get(name) is not engine:
+                raise ValueError(
+                    f"engine instance named {name!r} conflicts with the "
+                    f"already-registered engine of that name; call "
+                    f"repro.engine.register({name!r}, eng, override=True) "
+                    f"explicitly if you mean to replace it globally, or "
+                    f"give the instance a distinct name")
+        base = dataclasses.replace(base, trunk_impl=name)
+    eng = engine_lib.resolve(base)          # strict + capability gate
+
+    sites = valid_sites(cfg)
+    if layer_overrides and sites is not None:
+        unknown = sorted(set(layer_overrides) - sites)
+        if unknown:
+            raise ValueError(
+                f"layer_overrides sites {unknown} are not wired for "
+                f"{cfg.name!r}"
+                + (f"; valid sites: {sorted(sites)}" if sites else
+                   f" (family {cfg.family!r} has no per-site overrides "
+                   f"yet — the config-wide rebranch spec still applies)"))
+
+    merged = dict(getattr(cfg, "rebranch_overrides", ()))
+    for site, ov in (layer_overrides or {}).items():
+        merged[site] = _normalize_override(base, site, ov)
+    for site, spec in merged.items():
+        if spec.enabled:
+            engine_lib.resolve(spec)        # gate per-layer engines too
+
+    cfg = dataclasses.replace(cfg, rebranch=base,
+                              rebranch_overrides=tuple(sorted(merged.items())))
+    return CompiledModel(cfg, eng)

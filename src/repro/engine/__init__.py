@@ -1,0 +1,31 @@
+"""Pluggable CiM execution engines (the repo's backend seam).
+
+One network, many substrates: every frozen-trunk matmul/conv in the repo
+dispatches through a named :class:`TrunkEngine` resolved from
+``ReBranchSpec.trunk_impl``.  The three stock engines (``int8_native``,
+``dequant``, ``pallas``) register themselves on import; new backends (a
+fused bitserial TPU kernel, a halo-exchange sharded conv, ...) plug in
+with :func:`register` — no string surgery in core/models/kernels.
+
+    from repro import engine
+    engine.register("my_backend", MyEngine())
+    spec = ReBranchSpec(trunk_impl="my_backend")
+
+Resolution is strict (unknown names raise with the registered set) and
+capability-gated (asking an engine for a fidelity mode it lacks fails
+loudly).  ``repro.deploy.compile_model`` builds on this to map engines —
+and ROM vs SRAM placement — per layer.
+"""
+
+from repro.engine.base import (
+    ConvEpilogue, EngineCapabilities, TrunkEngine,
+)
+from repro.engine.registry import (
+    get, register, registered_names, resolve, unregister,
+)
+from repro.engine import builtin as _builtin   # registers the stock engines
+
+__all__ = [
+    "ConvEpilogue", "EngineCapabilities", "TrunkEngine",
+    "get", "register", "registered_names", "resolve", "unregister",
+]

@@ -1,0 +1,141 @@
+"""TrunkEngine: the execution contract every CiM backend implements.
+
+YOLoC's premise is that ONE network runs on heterogeneous CiM substrates —
+frozen ROM trunks, assisting SRAM branches, mapped per layer (paper §4,
+Fig. 12) — so backend choice is data, not control flow.  A ``TrunkEngine``
+is the pluggable unit of that choice: it owns the two frozen-trunk
+primitives (matmul, conv) plus a capability record the registry gates on.
+
+Engines receive the layer's ``CiMConfig`` (fidelity mode, ADC width,
+subarray geometry) and the frozen int8 ROM image; they return float
+outputs and are expected to provide a straight-through-estimator backward
+(no dW — the ROM cannot be written).  The conv entry point additionally
+takes a :class:`ConvEpilogue` so per-channel affine epilogues (bias, BN)
+and the trailing activation can be folded into the trunk pass instead of
+costing extra elementwise sweeps over the feature map.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineCapabilities:
+    """What a backend can actually do — the registry gates requests on it.
+
+    Enforced fields: ``fidelity_modes`` is gated by check() at resolve
+    time; ``epilogue`` is consulted by the conv layers (engines without it
+    are handed epilogue=None and the layer applies the affine/act itself).
+    ``grads``/``devices`` are ADVISORY metadata for humans and tooling —
+    resolve() cannot see whether it is inside a grad trace or which
+    backend a trace will land on, so nothing gates on them.
+
+    fidelity_modes: CiM modes the engine simulates; ``None`` means the
+        engine is fidelity-agnostic (it ignores ``cfg.mode`` entirely,
+        e.g. the dequantised float baseline).
+    grads: whether the engine provides a (straight-through) backward.
+    devices: JAX backends the engine runs on natively ('cpu'/'gpu'/'tpu');
+        Pallas engines also run elsewhere in interpret mode, which the
+        engine itself handles — this records where the fast path lives.
+    epilogue: whether conv() honours a :class:`ConvEpilogue` (per-channel
+        scale riding the trunk's dequant multiply, bias + activation in
+        the same fused pass).
+    """
+    fidelity_modes: tuple | None = ("ideal", "per_subarray", "bitserial")
+    grads: bool = True
+    devices: tuple = ("cpu", "gpu", "tpu")
+    epilogue: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvEpilogue:
+    """Per-output-channel affine + activation fused after a trunk conv.
+
+      y = act(conv(x, w) * scale + bias)
+
+    ``scale``/``bias`` are [C_out] arrays (or None).  Inference BN folds
+    exactly into this shape: scale = rsqrt(var+eps)*gamma, bias =
+    beta - mean*scale.  The per-channel ``scale`` composes with the
+    trunk's own dequantisation scales, so supporting engines apply it for
+    free inside their existing scale epilogue.
+    """
+    scale: Any = None
+    bias: Any = None
+    act: str | None = None          # None | 'relu' | 'leaky_relu'
+    leaky_slope: float = 0.1
+
+    def without_act(self) -> "ConvEpilogue":
+        return dataclasses.replace(self, act=None)
+
+
+def activate(y, epilogue: ConvEpilogue | None):
+    if epilogue is None or epilogue.act is None:
+        return y
+    if epilogue.act == "relu":
+        return jax.nn.relu(y)
+    if epilogue.act == "leaky_relu":
+        return jax.nn.leaky_relu(y, epilogue.leaky_slope)
+    raise ValueError(f"unknown epilogue activation: {epilogue.act!r}")
+
+
+def finish(y, epilogue: ConvEpilogue | None):
+    """scale -> bias -> activation tail of an epilogue, applied to the
+    trunk output.  The per-channel scale rides the trunk's existing
+    per-channel dequant multiply (XLA fuses the chain into one elementwise
+    pass); applying it on the OUTPUT rather than pre-folding it into
+    ``w_scale`` keeps BN parameters differentiable — ``w_scale`` is a
+    nondiff argument of the STE custom_vjp, so anything folded into it
+    would receive a float0 cotangent."""
+    if epilogue is None:
+        return y
+    if epilogue.scale is not None:
+        y = y * epilogue.scale.astype(y.dtype)
+    if epilogue.bias is not None:
+        y = y + epilogue.bias.astype(y.dtype)
+    return activate(y, epilogue)
+
+
+class TrunkEngine:
+    """Base class for CiM trunk execution backends.
+
+    Subclasses set ``name``/``capabilities`` and implement ``matmul`` and
+    ``conv``.  Register instances with :func:`repro.engine.register`; layers
+    obtain them with :func:`repro.engine.resolve`, which also enforces the
+    capability contract against the requesting ``ReBranchSpec``.
+    """
+
+    name: str = "abstract"
+    capabilities: EngineCapabilities = EngineCapabilities()
+
+    def matmul(self, cfg, x, w_q, w_scale, *, out_axes=None):
+        """y = dequant(CiM(quant(x), w_q)); [..., K] x [K, N] -> [..., N].
+
+        out_axes: optional logical sharding annotation for the raw dot
+        output (row-parallel reduce-scatter hint); engines without SPMD
+        integration may ignore it.
+        """
+        raise NotImplementedError
+
+    def conv(self, cfg, x, w_q, w_scale, *, stride=1, padding="SAME",
+             epilogue: ConvEpilogue | None = None):
+        """NHWC/HWIO frozen-trunk conv with an optional fused epilogue."""
+        raise NotImplementedError
+
+    def check(self, spec) -> None:
+        """Capability gate: raise if ``spec`` asks for something this
+        engine cannot do (called by the registry's resolve())."""
+        caps = self.capabilities
+        mode = spec.cim.mode
+        if caps.fidelity_modes is not None and mode not in caps.fidelity_modes:
+            raise ValueError(
+                f"engine {self.name!r} does not support CiM fidelity mode "
+                f"{mode!r} (supported: {list(caps.fidelity_modes)}); pick "
+                f"another mode or another engine")
+
+    def __repr__(self):
+        return f"<TrunkEngine {self.name!r} caps={self.capabilities}>"

@@ -1,0 +1,85 @@
+"""The three stock TrunkEngines, registered at import time.
+
+int8_native : pure-jnp CiM macro model (core.cim) on int8 operands — the
+              default; exact fidelity control, runs anywhere, what
+              accuracy studies should use.
+dequant     : dequantise the ROM image and run a plain XLA matmul/conv on
+              fake-quantised activations — the paper-faithful float
+              baseline the perf work is measured against.  Fidelity-
+              agnostic (ignores ``cfg.mode``).
+pallas      : the fused Pallas kernels (quantise in VMEM, int8 MXU dots,
+              scale epilogue) — the TPU deployment fast path; interpret
+              mode elsewhere.  Kernel import is deferred so environments
+              without the Pallas toolchain can still use the other two.
+
+Every engine's backward is the straight-through estimator (dx only, no
+dW — the ROM cannot be written), so branch training is identical under
+all three.
+"""
+
+from __future__ import annotations
+
+from repro.core import rebranch as rebranch_lib
+from repro.engine import base
+from repro.engine.registry import register
+
+
+class Int8NativeEngine(base.TrunkEngine):
+    """core.cim macro model on int8 operands (all fidelity modes)."""
+
+    name = "int8_native"
+    capabilities = base.EngineCapabilities(
+        fidelity_modes=("ideal", "per_subarray", "bitserial"),
+        grads=True, devices=("cpu", "gpu", "tpu"), epilogue=True)
+
+    def matmul(self, cfg, x, w_q, w_scale, *, out_axes=None):
+        return rebranch_lib.trunk_matmul(cfg, out_axes, x, w_q, w_scale)
+
+    def conv(self, cfg, x, w_q, w_scale, *, stride=1, padding="SAME",
+             epilogue=None):
+        y = rebranch_lib.trunk_conv(cfg, stride, padding, x, w_q, w_scale)
+        return base.finish(y, epilogue)
+
+
+class DequantEngine(base.TrunkEngine):
+    """Dequantised float trunk + fake-quant activations (XLA baseline)."""
+
+    name = "dequant"
+    capabilities = base.EngineCapabilities(
+        fidelity_modes=None,        # ignores cfg.mode entirely
+        grads=True, devices=("cpu", "gpu", "tpu"), epilogue=True)
+
+    def matmul(self, cfg, x, w_q, w_scale, *, out_axes=None):
+        del out_axes                # plain XLA dot; GSPMD decides
+        return rebranch_lib.trunk_matmul_dequant(cfg, x, w_q, w_scale)
+
+    def conv(self, cfg, x, w_q, w_scale, *, stride=1, padding="SAME",
+             epilogue=None):
+        y = rebranch_lib.trunk_conv_dequant(cfg, stride, padding,
+                                            x, w_q, w_scale)
+        return base.finish(y, epilogue)
+
+
+class PallasEngine(base.TrunkEngine):
+    """Fused Pallas kernels (TPU fast path; interpret mode elsewhere)."""
+
+    name = "pallas"
+    capabilities = base.EngineCapabilities(
+        fidelity_modes=("ideal", "per_subarray", "bitserial"),
+        grads=True, devices=("tpu",), epilogue=True)
+
+    def matmul(self, cfg, x, w_q, w_scale, *, out_axes=None):
+        from repro.kernels import ops as kops   # deferred: optional dep
+        del out_axes                # kernel owns its own layout
+        return kops.trunk_matmul_pallas(cfg, x, w_q, w_scale)
+
+    def conv(self, cfg, x, w_q, w_scale, *, stride=1, padding="SAME",
+             epilogue=None):
+        from repro.kernels import ops as kops   # deferred: optional dep
+        y = kops.trunk_conv(cfg, stride, padding, x, w_q, w_scale)
+        return base.finish(y, epilogue)
+
+
+register("int8_native", Int8NativeEngine())
+register("dequant", DequantEngine())
+register("pallas", PallasEngine())

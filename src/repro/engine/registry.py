@@ -1,0 +1,62 @@
+"""The TrunkEngine registry: named, pluggable CiM execution backends.
+
+Backends register once under a string name; layers resolve the name from
+``ReBranchSpec.trunk_impl`` at trace time.  Resolution is STRICT — an
+unknown name raises immediately with the list of registered engines (no
+silent fallback; a typo used to fall through to int8_native).
+"""
+
+from __future__ import annotations
+
+from repro.engine.base import TrunkEngine
+
+_REGISTRY: dict[str, TrunkEngine] = {}
+
+
+def register(name: str, engine: TrunkEngine, *, override: bool = False):
+    """Register ``engine`` under ``name``.
+
+    Re-registering an existing name is an error unless ``override=True``
+    (the hook for swapping in a tuned/sharded variant of a stock engine).
+    Returns the engine so the call composes with construction.
+    """
+    if not isinstance(name, str) or not name:
+        raise ValueError(f"engine name must be a non-empty str, got {name!r}")
+    if name in _REGISTRY and not override:
+        raise ValueError(
+            f"engine {name!r} is already registered "
+            f"({_REGISTRY[name]!r}); pass override=True to replace it")
+    _REGISTRY[name] = engine
+    return engine
+
+
+def unregister(name: str) -> None:
+    """Remove a registered engine (test/plugin teardown)."""
+    _REGISTRY.pop(name, None)
+
+
+def registered_names() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def get(name: str) -> TrunkEngine:
+    """Strict name lookup: unknown names raise with the valid set."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown trunk engine {name!r}: registered engines are "
+            f"{registered_names()}") from None
+
+
+def resolve(spec_or_name) -> TrunkEngine:
+    """Resolve a ``ReBranchSpec`` (via ``.trunk_impl``) or a bare name to
+    its engine.  When given a spec, the engine's capability contract is
+    enforced against it (fidelity mode etc.) — requesting e.g.
+    ``bitserial`` from an engine that lacks it fails loudly here, not as
+    a silent wrong-numerics forward."""
+    if isinstance(spec_or_name, str):
+        return get(spec_or_name)
+    engine = get(spec_or_name.trunk_impl)
+    engine.check(spec_or_name)
+    return engine

@@ -6,17 +6,18 @@ cim_conv        : the macro on im2col conv patches (paper §4.1 CNN trunks)
 trunk_conv      : frozen-trunk conv, in-VMEM act quantisation, STE backward
 rebranch_conv   : fused trunk conv + 1x1 compress sketch in one patch pass
 
-Trunk dispatch table (``ReBranchSpec.trunk_impl``), for linears AND convs:
-
-  'int8_native' : pure-jnp CiM macro model (core.cim) on int8 operands —
-                  the default; exact fidelity control, runs anywhere, and
-                  what accuracy studies should use.
-  'dequant'     : dequantise the ROM image and run a plain XLA matmul/conv
-                  on fake-quantised activations — the paper-faithful
-                  baseline the perf work is measured against.
-  'pallas'      : these kernels — one fused pass (quantise in VMEM, int8
-                  MXU dots, scale epilogue); the deployment fast path on
-                  TPU, interpret-mode elsewhere.
+Dispatch: models never call these directly — every frozen-trunk matmul
+and conv resolves ``ReBranchSpec.trunk_impl`` through the TrunkEngine
+registry (``repro.engine``), where these kernels are registered as the
+``'pallas'`` engine (one fused pass: quantise in VMEM, int8 MXU dots,
+per-channel scale — and, via the engine's ConvEpilogue hook, folded
+BN/bias/activation — the deployment fast path on TPU, interpret mode
+elsewhere).  The stock alternatives are ``'int8_native'`` (the pure-jnp
+core.cim macro model, exact fidelity control, runs anywhere) and
+``'dequant'`` (the paper-faithful XLA float baseline).  Resolution is
+strict — unknown names raise with the registered set — and new backends
+plug in with ``repro.engine.register`` without touching model code;
+``repro.deploy.compile_model`` maps engines per layer on top.
 """
 
 from repro.kernels.ops import (

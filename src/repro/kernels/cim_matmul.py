@@ -22,7 +22,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import adc as adc_lib
 from repro.core import cim as cim_lib
+
+# The ADC transfer functions are the SAME objects the pure-jnp macro model
+# uses (core.adc) — the comparator convention cannot drift between the
+# oracle and the kernel.
+_adc = adc_lib.adc_transfer
+_signed_adc = adc_lib.signed_adc
 
 
 def _dot_f32(a, b):
@@ -33,21 +40,6 @@ def _dot_f32(a, b):
 def _dot_int8(a, b):
     return jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
                                preferred_element_type=jnp.int32)
-
-
-def _adc(psum, full_range, cfg: cim_lib.CiMConfig):
-    rng = full_range * cfg.adc_range_frac
-    lsb = rng / cfg.adc_levels
-    # +1e-3 threshold bias: see core.cim.adc_transfer (half-boundary
-    # determinism across model/kernel float pipelines)
-    return jnp.clip(jnp.round(psum / lsb + 1e-3), 0, cfg.adc_levels) * lsb
-
-
-def _signed_adc(psum, full_range, cfg: cim_lib.CiMConfig):
-    rng = full_range * cfg.psum_range_frac
-    half = cfg.adc_levels / 2.0
-    lsb = rng / half
-    return jnp.clip(jnp.round(psum / lsb + 1e-3), -half, half) * lsb
 
 
 def cim_block_dot(cfg: cim_lib.CiMConfig, x, w):
@@ -77,9 +69,7 @@ def cim_block_dot(cfg: cim_lib.CiMConfig, x, w):
 
     if cfg.mode == "bitserial":
         s = x.shape[1] // rows
-        gmax = cfg.group_max
-        mag_bits = cfg.weight_bits - 1
-        act_groups = -(-(cfg.act_bits - 1) // cfg.act_group_bits)
+        mag_bits, act_groups, gmax = adc_lib.bitserial_planes(cfg)
         x_i = x.astype(jnp.int32)
         w_i = w.astype(jnp.int32)
         acc = jnp.zeros((x.shape[0], w.shape[1]), jnp.float32)

@@ -1,4 +1,9 @@
-"""Jit'd public wrappers for the Pallas kernels (+ STE backward rules)."""
+"""Jit'd public wrappers for the Pallas kernels (+ STE backward rules).
+
+These are the primitives behind the ``'pallas'`` TrunkEngine
+(repro.engine.builtin.PallasEngine); layers reach them via
+``repro.engine.resolve(spec)``, never by string comparison.
+"""
 
 from __future__ import annotations
 
@@ -29,10 +34,12 @@ def cim_matmul(x_q, w_q, cfg: cim_lib.CiMConfig = cim_lib.DEFAULT_CIM):
 def trunk_matmul_pallas(cfg: cim_lib.CiMConfig, x, w_q, w_scale):
     """Frozen-trunk matmul on the Pallas CiM kernel with an STE backward.
 
-    Drop-in for core.rebranch.trunk_matmul (spec.trunk_impl == 'pallas').
+    Drop-in for core.rebranch.trunk_matmul (the 'pallas' engine's matmul).
     """
     x_q, sx = quant.quantize_activations(x)
-    out = cim_matmul_pallas(x_q, w_q, cfg)
+    lead = x_q.shape[:-1]           # kernel is 2D; flatten [..., K] -> [M, K]
+    out = cim_matmul_pallas(x_q.reshape(-1, x_q.shape[-1]), w_q, cfg)
+    out = out.reshape(*lead, out.shape[-1])
     return (out * sx).astype(x.dtype) * w_scale.astype(x.dtype)
 
 
@@ -58,7 +65,7 @@ def rebranch_matmul(x, w_q, w_scale, c, core, u):
 
 
 # ---------------------------------------------------------------------------
-# convolution dispatch (models/cnn.py, spec.trunk_impl == 'pallas')
+# convolution primitives (the 'pallas' engine's conv path)
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("cfg", "stride", "padding"))
@@ -73,7 +80,7 @@ def trunk_conv(cfg: cim_lib.CiMConfig, stride: int, padding: str,
                x, w_q, w_scale):
     """Frozen-trunk convolution on the Pallas CiM kernel, STE backward.
 
-    Drop-in for core.rebranch.trunk_conv (spec.trunk_impl == 'pallas');
+    Drop-in for core.rebranch.trunk_conv (the 'pallas' engine's conv);
     activation quantisation happens in VMEM at per-(patch-row, k-block)
     granularity inside the fused kernel.
     """

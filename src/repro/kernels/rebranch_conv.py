@@ -16,7 +16,7 @@ cim_conv_pallas      : int8 patches x int8 ROM weights through the macro
 trunk_conv_pallas    : float activations in; per-(patch-row, k-block)
                        dynamic int8 quantisation happens in VMEM, the int8
                        MXU dot and the per-channel scale epilogue follow in
-                       the same pass (spec.trunk_impl == 'pallas').
+                       the same pass (the 'pallas' TrunkEngine path).
 rebranch_conv_pallas : the fused ReBranch conv — trunk conv AND the 1x1
                        compress sketch  t1 = P @ blockdiag(C)  in a single
                        pass over the patch matrix; the tiny epilogue

@@ -10,7 +10,6 @@ cell and the train driver executes for real:
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -18,10 +17,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro import optim
+from repro import deploy, optim
 from repro.core import rebranch
 from repro.distributed import sharding as shd
-from repro.models import api
 from repro.models.config import ArchConfig
 
 
@@ -82,8 +80,9 @@ def batch_shardings(cfg: ArchConfig, mesh, specs: dict, global_batch: int):
 # ---------------------------------------------------------------------------
 
 def cache_specs(cfg: ArchConfig, global_batch: int, max_len: int):
+    model = deploy.compile_model(cfg)
     return jax.eval_shape(
-        lambda: api.init_cache(cfg, global_batch, max_len))
+        lambda: model.init_cache(global_batch, max_len))
 
 
 def cache_pspecs(cfg: ArchConfig, mesh, cache_tree):
@@ -164,13 +163,14 @@ def token_cross_entropy(logits, labels):
 # ---------------------------------------------------------------------------
 
 def chunked_readout_loss(params, feats, labels, cfg: ArchConfig,
-                         num_chunks: int = 8):
+                         num_chunks: int = 8, model=None):
     """ln_f + readout + CE in sequence chunks via a checkpointed scan.
 
     The full-vocab logits tensor never materialises for more than one
     chunk (gemma train_4k: 0.5 GiB/chunk instead of ~4 GiB x 5 buffers);
     the backward recomputes each chunk's logits.
     """
+    model = model or deploy.compile_model(cfg)
     b, s, d = feats.shape
     nc = num_chunks
     while s % nc:
@@ -181,7 +181,7 @@ def chunked_readout_loss(params, feats, labels, cfg: ArchConfig,
 
     def chunk_fn(carry, inp):
         xc, yc = inp
-        logits = api.apply_head(params, xc, cfg)
+        logits = model.apply_head(params, xc)
         lf = logits.astype(jnp.float32)
         lse = jax.scipy.special.logsumexp(lf, axis=-1)
         onehot = jax.nn.one_hot(yc, logits.shape[-1], dtype=jnp.bfloat16)
@@ -194,15 +194,16 @@ def chunked_readout_loss(params, feats, labels, cfg: ArchConfig,
 
 
 def make_train_step(cfg: ArchConfig, opt_cfg: optim.AdamWConfig | None = None,
-                    lr_fn=None, loss_chunks: int = 8):
+                    lr_fn=None, loss_chunks: int = 8, model=None):
     opt_cfg = opt_cfg or optim.AdamWConfig()
+    model = model or deploy.compile_model(cfg)
 
     def train_step(trainable, frozen, opt_state, batch):
         def loss_fn(t):
             params = rebranch.combine(t, frozen)
-            feats = api.features(params, batch, cfg)
+            feats = model.features(params, batch)
             return chunked_readout_loss(params, feats, batch["labels"],
-                                        cfg, loss_chunks)
+                                        cfg, loss_chunks, model=model)
 
         loss, grads = jax.value_and_grad(loss_fn)(trainable)
         lr = lr_fn(opt_state["step"]) if lr_fn else opt_cfg.lr
@@ -215,16 +216,21 @@ def make_train_step(cfg: ArchConfig, opt_cfg: optim.AdamWConfig | None = None,
     return train_step
 
 
-def make_prefill_step(cfg: ArchConfig, global_batch: int, seq_len: int):
+def make_prefill_step(cfg: ArchConfig, global_batch: int, seq_len: int,
+                      model=None):
+    model = model or deploy.compile_model(cfg)
+
     def prefill_step(params, batch):
-        cache = api.init_cache(cfg, global_batch, seq_len)
-        return api.prefill(params, batch, cfg, cache)
+        cache = model.init_cache(global_batch, seq_len)
+        return model.prefill(params, batch, cache)
     return prefill_step
 
 
-def make_serve_step(cfg: ArchConfig):
+def make_serve_step(cfg: ArchConfig, model=None):
+    model = model or deploy.compile_model(cfg)
+
     def serve_step(params, batch, cache):
-        logits, cache = api.decode_step(params, batch["tokens"], cfg, cache)
+        logits, cache = model.decode_step(params, batch["tokens"], cache)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return next_tok, cache
     return serve_step
@@ -234,10 +240,11 @@ def make_serve_step(cfg: ArchConfig):
 # parameter/optimizer shardings
 # ---------------------------------------------------------------------------
 
-def model_state_shardings(cfg: ArchConfig, mesh, key=None):
+def model_state_shardings(cfg: ArchConfig, mesh, key=None, model=None):
     """(trainable, frozen, opt) shardings without allocating parameters."""
     key = key if key is not None else jax.random.PRNGKey(0)
-    shapes = jax.eval_shape(functools.partial(api.init, cfg=cfg), key)
+    model = model or deploy.compile_model(cfg)
+    shapes = jax.eval_shape(model.init, key)
     with shd.use_mesh(mesh):
         pspecs = shd.param_specs(shapes, mesh)
     t_spec, f_spec = rebranch.partition(pspecs)

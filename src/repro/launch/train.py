@@ -61,10 +61,11 @@ def main(argv=None):
         seed=args.seed, vocab_size=cfg.vocab_size, seq_len=args.seq,
         global_batch=args.batch, num_codebooks=cfg.num_codebooks)
 
-    from repro.models import api
+    from repro import deploy
+    model = deploy.compile_model(cfg)
     key = jax.random.PRNGKey(args.seed)
     with shd.use_mesh(mesh), mesh:
-        params = api.init(key, cfg)
+        params = model.init(key)
         trainable, frozen = rebranch.partition(params)
         opt_state = optim.init(trainable)
         lr_fn = lambda step: schedule.cosine_with_warmup(
@@ -72,7 +73,7 @@ def main(argv=None):
             total_steps=args.steps)
         opt_cfg = optim.AdamWConfig(lr=args.lr)
         train_step = jax.jit(steps_lib.make_train_step(
-            cfg, opt_cfg, lr_fn=lr_fn, loss_chunks=4))
+            cfg, opt_cfg, lr_fn=lr_fn, loss_chunks=4, model=model))
 
         start = 0
         if args.resume and args.ckpt_dir and ckpt.latest_steps(args.ckpt_dir):

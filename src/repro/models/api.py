@@ -5,6 +5,12 @@
   prefill(params, batch, cfg, cache)      -> (logits, cache) (serve)
   decode_step(params, tokens, cfg, cache) -> (logits, cache) (serve)
   init_cache(cfg, batch, max_len)         -> cache
+
+DEPRECATED as a user entrypoint: prefer ``repro.deploy.compile_model``,
+which resolves the TrunkEngine and the per-layer ROM/SRAM mapping once
+and returns these same functions bound to the resolved config.  The free
+functions stay as thin shims (deploy and the remaining callers route
+through them) and behave identically for configs without overrides.
 """
 
 from __future__ import annotations

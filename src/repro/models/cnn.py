@@ -5,22 +5,18 @@ with  1x1 compress -> KxK trainable core conv -> 1x1 decompress  (branch;
 the point-wise (de)compression layers are fixed, only the core trains).
 With D=U=4 the branch holds 1/16 of the trunk parameters.
 
-NHWC layout.  The trunk conv honours ``spec.trunk_impl`` (same dispatch
-table as ReBranch linears — every backward is the straight-through
-estimator, so branch training is identical under all three):
+NHWC layout.  The trunk conv resolves ``spec.trunk_impl`` through the
+``repro.engine`` registry (the same TrunkEngine the ReBranch linears use
+— 'int8_native' / 'dequant' / 'pallas' out of the box, strict resolution,
+every backward the straight-through estimator so branch training is
+identical under all engines).  Per-layer engine / ROM-vs-SRAM overrides
+come in through ``cfg.rebranch_overrides`` (see ``config.spec_for`` and
+``repro.deploy.compile_model``); each conv is addressed by a site name
+('convs.3', 'stem', 'stages.1.0.conv2', 'head.0', ...).
 
-  'int8_native' : im2col through the core.cim macro model on int8
-                  operands (fidelity set by spec.cim.mode: ideal /
-                  per_subarray / bitserial) — the default; use it for
-                  accuracy studies and anywhere correctness matters.
-  'dequant'     : dequantised weights + fake-quantised activations on a
-                  plain XLA conv — the paper-faithful baseline; fastest
-                  on CPU, 2x the weight traffic on TPU.
-  'pallas'      : kernels.trunk_conv — the fused Pallas im2col kernel
-                  (in-VMEM per-patch-row quantisation, int8 MXU dots,
-                  per-channel scale epilogue); the TPU deployment path.
-                  The fully-fused trunk+compress kernel is exposed as
-                  kernels.rebranch_conv for inference.
+With ``cfg.fuse_bn_act`` the inference BN affine + activation fold into
+the trunk conv's engine epilogue (one fused pass instead of three
+feature-map sweeps) — numerically the same inference-style BN.
 """
 
 from __future__ import annotations
@@ -32,10 +28,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import quant
+from repro import engine as engine_lib
 from repro.core import rebranch as rebranch_lib
 from repro.core.rebranch import ReBranchSpec
-from repro.models.config import ArchConfig
+from repro.engine import base as engine_base
+from repro.models.config import spec_for
 
 
 # ---------------------------------------------------------------------------
@@ -68,25 +65,38 @@ def init_conv(key, k: int, c_in: int, c_out: int, spec: ReBranchSpec,
     return p
 
 
-def apply_conv(params, x, spec: ReBranchSpec, stride: int = 1):
+def apply_conv(params, x, spec: ReBranchSpec, stride: int = 1,
+               epilogue: engine_base.ConvEpilogue | None = None):
+    """One ReBranch conv through the resolved TrunkEngine.
+
+    epilogue: optional per-channel affine + activation folded into the
+    trunk pass (the scale rides the engine's existing dequant epilogue;
+    with a live branch the activation is deferred until after the branch
+    add so act(BN(trunk + branch)) semantics are preserved).
+    """
     if not spec.enabled:
-        return _conv(x, params["sram"]["w"], stride)
+        return engine_base.finish(_conv(x, params["sram"]["w"], stride),
+                                  epilogue)
     rom = params["rom"]
-    if spec.trunk_impl == "dequant":
-        w = rom["w_q"].astype(x.dtype) * rom["w_scale"].astype(x.dtype)
-        y = _conv(quant.fake_quant_ste(x), w, stride)
-    elif spec.trunk_impl == "pallas":
-        from repro.kernels import ops as kops  # deferred: optional dep
-        y = kops.trunk_conv(spec.cim, stride, "SAME",
-                            x, rom["w_q"], rom["w_scale"])
-    else:  # 'int8_native'
-        y = rebranch_lib.trunk_conv(spec.cim, stride, "SAME",
-                                    x, rom["w_q"], rom["w_scale"])
-    if spec.branch_enabled and "core" in params["sram"]:
+    eng = engine_lib.resolve(spec)          # strict + capability-gated
+    has_branch = spec.branch_enabled and "core" in params["sram"]
+    # engines without epilogue support get None (handing them one would be
+    # silently dropped); the layer applies the whole epilogue itself then
+    fuse = epilogue is not None and eng.capabilities.epilogue
+    trunk_ep = (epilogue.without_act() if has_branch else epilogue) \
+        if fuse else None
+    y = eng.conv(spec.cim, x, rom["w_q"], rom["w_scale"],
+                 stride=stride, padding="SAME", epilogue=trunk_ep)
+    if has_branch:
         t = _conv(x, rom["C"].astype(x.dtype), 1)
         t = _conv(t, params["sram"]["core"].astype(x.dtype), stride)
-        y = y + _conv(t, rom["U"].astype(x.dtype), 1)
-    return y
+        b = _conv(t, rom["U"].astype(x.dtype), 1)
+        if fuse:
+            if epilogue.scale is not None:
+                b = b * epilogue.scale.astype(b.dtype)
+            return engine_base.activate(y + b, epilogue)
+        return engine_base.finish(y + b, epilogue)
+    return y if fuse or epilogue is None else engine_base.finish(y, epilogue)
 
 
 def conv_trainable_frac(spec: ReBranchSpec) -> float:
@@ -130,11 +140,19 @@ def _bn_init(c):
                      "mean": jnp.zeros((c,)), "var": jnp.ones((c,))}}
 
 
-def _bn_apply(p, x, train: bool = False):
-    # inference-style BN (frozen statistics; YOLoC deploys inference chips)
-    s = p["sram"]
+def bn_epilogue(bn_params, act: str | None = None) -> engine_base.ConvEpilogue:
+    """Inference BN (frozen statistics; YOLoC deploys inference chips), plus
+    an optional activation, as a fusable conv epilogue: a per-output-channel
+    affine that rides the trunk's dequant multiply in one fused elementwise
+    pass.  The ONE home of the BN affine — _bn_apply is defined from it."""
+    s = bn_params["sram"]
     inv = jax.lax.rsqrt(s["var"] + 1e-5) * s["scale"]
-    return x * inv + (s["bias"] - s["mean"] * inv)
+    return engine_base.ConvEpilogue(scale=inv, bias=s["bias"] - s["mean"] * inv,
+                                    act=act)
+
+
+def _bn_apply(p, x, train: bool = False):
+    return engine_base.finish(x, bn_epilogue(p))
 
 
 def _leaky(x):
@@ -149,6 +167,11 @@ class CNNConfig:
     rebranch: ReBranchSpec = dataclasses.field(default_factory=ReBranchSpec)
     head_anchors: int = 5            # YOLO heads
     head_classes: int = 20           # VOC
+    # per-layer mapping overrides ((site, ReBranchSpec), ...) — see
+    # config.spec_for / repro.deploy.compile_model
+    rebranch_overrides: tuple = ()
+    # fold BN + activation into the trunk conv's engine epilogue
+    fuse_bn_act: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -159,12 +182,12 @@ VGG8_CHANNELS = (64, 64, 128, 128, 256, 256)   # conv layers, pool every 2
 
 
 def init_vgg8(key, cfg: CNNConfig):
-    spec = cfg.rebranch
     keys = jax.random.split(key, len(VGG8_CHANNELS) + 1)
     convs, bns = [], []
     c_in = 3
     for i, c in enumerate(VGG8_CHANNELS):
-        convs.append(init_conv(keys[i], 3, c_in, c, spec))
+        convs.append(init_conv(keys[i], 3, c_in, c,
+                               spec_for(cfg, f"convs.{i}")))
         bns.append(_bn_init(c))
         c_in = c
     fc = {"sram": {
@@ -176,9 +199,12 @@ def init_vgg8(key, cfg: CNNConfig):
 
 
 def apply_vgg8(params, x, cfg: CNNConfig):
-    spec = cfg.rebranch
     for i, (conv, bn) in enumerate(zip(params["convs"], params["bns"])):
-        x = jax.nn.relu(_bn_apply(bn, apply_conv(conv, x, spec)))
+        spec = spec_for(cfg, f"convs.{i}")
+        if cfg.fuse_bn_act:
+            x = apply_conv(conv, x, spec, epilogue=bn_epilogue(bn, "relu"))
+        else:
+            x = jax.nn.relu(_bn_apply(bn, apply_conv(conv, x, spec)))
         if i % 2 == 1:
             x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
                                       (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
@@ -194,24 +220,27 @@ RESNET18_STAGES = ((64, 2, 1), (128, 2, 2), (256, 2, 2), (512, 2, 2))
 
 
 def init_resnet18(key, cfg: CNNConfig):
-    spec = cfg.rebranch
     key, k0 = jax.random.split(key)
-    params = {"stem": init_conv(k0, 3, 3, 64, spec),
+    params = {"stem": init_conv(k0, 3, 3, 64, spec_for(cfg, "stem")),
               "stem_bn": _bn_init(64), "stages": []}
     c_in = 64
-    for c_out, blocks, stride in RESNET18_STAGES:
+    for si, (c_out, blocks, stride) in enumerate(RESNET18_STAGES):
         stage = []
         for b in range(blocks):
             key, k1, k2, k3 = jax.random.split(key, 4)
             st = stride if b == 0 else 1
+            site = f"stages.{si}.{b}"
             blk = {
-                "conv1": init_conv(k1, 3, c_in, c_out, spec),
+                "conv1": init_conv(k1, 3, c_in, c_out,
+                                   spec_for(cfg, f"{site}.conv1")),
                 "bn1": _bn_init(c_out),
-                "conv2": init_conv(k2, 3, c_out, c_out, spec),
+                "conv2": init_conv(k2, 3, c_out, c_out,
+                                   spec_for(cfg, f"{site}.conv2")),
                 "bn2": _bn_init(c_out),
             }
             if st != 1 or c_in != c_out:
-                blk["proj"] = init_conv(k3, 1, c_in, c_out, spec)
+                blk["proj"] = init_conv(k3, 1, c_in, c_out,
+                                        spec_for(cfg, f"{site}.proj"))
                 blk["proj_bn"] = _bn_init(c_out)
             stage.append(blk)
             c_in = c_out
@@ -224,19 +253,31 @@ def init_resnet18(key, cfg: CNNConfig):
 
 
 def apply_resnet18(params, x, cfg: CNNConfig):
-    spec = cfg.rebranch
-    x = jax.nn.relu(_bn_apply(params["stem_bn"],
-                              apply_conv(params["stem"], x, spec)))
-    for stage, (_, _, stride) in zip(params["stages"], RESNET18_STAGES):
+    def conv_bn(conv_p, bn_p, xx, spec, st=1, act=None):
+        # fuse_bn_act: the BN affine always folds into the conv epilogue;
+        # the activation only where it legally follows the conv (bn2 /
+        # proj_bn feed the residual add, so their act stays outside)
+        if cfg.fuse_bn_act:
+            return apply_conv(conv_p, xx, spec, st,
+                              epilogue=bn_epilogue(bn_p, act))
+        y = _bn_apply(bn_p, apply_conv(conv_p, xx, spec, st))
+        return jax.nn.relu(y) if act == "relu" else y
+
+    x = conv_bn(params["stem"], params["stem_bn"], x,
+                spec_for(cfg, "stem"), act="relu")
+    for si, (stage, (_, _, stride)) in enumerate(
+            zip(params["stages"], RESNET18_STAGES)):
         for b, blk in enumerate(stage):
             st = stride if b == 0 else 1
-            h = jax.nn.relu(_bn_apply(blk["bn1"],
-                                      apply_conv(blk["conv1"], x, spec, st)))
-            h = _bn_apply(blk["bn2"], apply_conv(blk["conv2"], h, spec))
+            site = f"stages.{si}.{b}"
+            h = conv_bn(blk["conv1"], blk["bn1"], x,
+                        spec_for(cfg, f"{site}.conv1"), st, act="relu")
+            h = conv_bn(blk["conv2"], blk["bn2"], h,
+                        spec_for(cfg, f"{site}.conv2"))
             sc = x
             if "proj" in blk:
-                sc = _bn_apply(blk["proj_bn"],
-                               apply_conv(blk["proj"], x, spec, st))
+                sc = conv_bn(blk["proj"], blk["proj_bn"], x,
+                             spec_for(cfg, f"{site}.proj"), st)
             x = jax.nn.relu(h + sc)
     x = jnp.mean(x, axis=(1, 2))
     return x @ params["fc"]["sram"]["w"] + params["fc"]["sram"]["b"]
@@ -262,27 +303,32 @@ TINY_YOLO = [
 
 
 def _init_darknet(key, plan, cfg: CNNConfig, head_convs):
-    spec = cfg.rebranch
     convs, bns = [], []
     c_in = 3
+    ci = 0
     for item in plan:
         if item == "M":
             continue                      # pools carry no params
         c, k = item
         key, k1 = jax.random.split(key)
-        convs.append(init_conv(k1, k, c_in, c, spec))
+        convs.append(init_conv(k1, k, c_in, c, spec_for(cfg, f"convs.{ci}")))
         bns.append(_bn_init(c))
         c_in = c
+        ci += 1
     # detection head: conv stack + 1x1 predictor (trainable — "SRAM")
     head = []
-    for c, k in head_convs:
+    for hi, (c, k) in enumerate(head_convs):
         key, k1 = jax.random.split(key)
-        head.append({"conv": init_conv(k1, k, c_in, c, spec), "bn": _bn_init(c)})
+        head.append({"conv": init_conv(k1, k, c_in, c,
+                                       spec_for(cfg, f"head.{hi}")),
+                     "bn": _bn_init(c)})
         c_in = c
     key, k1 = jax.random.split(key)
     n_out = cfg.head_anchors * (5 + cfg.head_classes)
+    # the 1x1 predictor is always a plain trainable conv (no site: there
+    # is nothing to override — it never freezes into ROM)
     pred = init_conv(k1, 1, c_in, n_out,
-                     dataclasses.replace(spec, enabled=False))
+                     dataclasses.replace(cfg.rebranch, enabled=False))
     return {"convs": convs, "bns": bns, "head": head, "pred": pred}
 
 
@@ -296,20 +342,28 @@ def init_tiny_yolo(key, cfg: CNNConfig):
 
 
 def apply_darknet(params, x, cfg: CNNConfig):
-    spec = cfg.rebranch
     plan = DARKNET19 if cfg.name == "darknet19" else TINY_YOLO
+
+    def conv_bn_leaky(conv_p, bn_p, xx, spec):
+        if cfg.fuse_bn_act:
+            return apply_conv(conv_p, xx, spec,
+                              epilogue=bn_epilogue(bn_p, "leaky_relu"))
+        return _leaky(_bn_apply(bn_p, apply_conv(conv_p, xx, spec)))
+
     i = 0
     for item in plan:
         if item == "M":
             x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
                                       (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
         else:
-            x = _leaky(_bn_apply(params["bns"][i],
-                                 apply_conv(params["convs"][i], x, spec)))
+            x = conv_bn_leaky(params["convs"][i], params["bns"][i], x,
+                              spec_for(cfg, f"convs.{i}"))
             i += 1
-    for blk in params["head"]:
-        x = _leaky(_bn_apply(blk["bn"], apply_conv(blk["conv"], x, spec)))
-    x = apply_conv(params["pred"], x, dataclasses.replace(spec, enabled=False))
+    for hi, blk in enumerate(params["head"]):
+        x = conv_bn_leaky(blk["conv"], blk["bn"], x,
+                          spec_for(cfg, f"head.{hi}"))
+    x = apply_conv(params["pred"], x,
+                   dataclasses.replace(cfg.rebranch, enabled=False))
     b, h, w, _ = x.shape
     return x.reshape(b, h, w, cfg.head_anchors, 5 + cfg.head_classes)
 
@@ -320,6 +374,33 @@ MODEL_REGISTRY = {
     "darknet19": (init_darknet19, apply_darknet),
     "tiny_yolo": (init_tiny_yolo, apply_darknet),
 }
+
+
+def override_sites(cfg: CNNConfig) -> set | None:
+    """Every site name this config's init/apply consult through spec_for —
+    kept NEXT TO the model builders so a structural edit (new conv, new
+    projection rule) updates the enumeration in the same file.  None for
+    names outside MODEL_REGISTRY.  (The 1x1 'pred' conv has no site: it
+    never freezes into ROM.)"""
+    if cfg.name == "vgg8":
+        return {f"convs.{i}" for i in range(len(VGG8_CHANNELS))}
+    if cfg.name == "resnet18":
+        sites, c_in = {"stem"}, 64
+        for si, (c_out, blocks, stride) in enumerate(RESNET18_STAGES):
+            for b in range(blocks):
+                st = stride if b == 0 else 1
+                sites |= {f"stages.{si}.{b}.conv1", f"stages.{si}.{b}.conv2"}
+                if st != 1 or c_in != c_out:        # same rule as init
+                    sites.add(f"stages.{si}.{b}.proj")
+                c_in = c_out
+        return sites
+    if cfg.name in ("darknet19", "tiny_yolo"):
+        plan = DARKNET19 if cfg.name == "darknet19" else TINY_YOLO
+        n_head = 2 if cfg.name == "darknet19" else 1
+        return ({f"convs.{i}"
+                 for i in range(sum(1 for it in plan if it != "M"))}
+                | {f"head.{i}" for i in range(n_head)})
+    return None
 
 
 def count_macs_and_params(init_fn, apply_fn, cfg: CNNConfig):

@@ -47,6 +47,13 @@ class ArchConfig:
     frontend: str = "none"         # none | vision | audio
     # --- technique ---
     rebranch: ReBranchSpec = dataclasses.field(default_factory=ReBranchSpec)
+    # Per-layer mapping overrides: ((site, ReBranchSpec), ...) resolved by
+    # spec_for().  Sites name parameter groups ('lm_head', 'codebook_head',
+    # 'blocks' for the transformer; conv sites for the CNNs) so e.g. the
+    # readout can stay SRAM-trainable while the trunk is ROM, or a single
+    # layer can run a different engine — the paper's Fig. 12 per-layer
+    # ROM/SRAM area map.  Normally built by repro.deploy.compile_model.
+    rebranch_overrides: tuple = ()
     # --- numerics ---
     dtype: Any = "bfloat16"
     remat: bool = True             # per-block activation checkpointing (train)
@@ -84,3 +91,17 @@ class ArchConfig:
         if self.sliding_window == 0:
             return True
         return layer_idx in self.full_attn_layers
+
+
+def spec_for(cfg, site: str) -> ReBranchSpec:
+    """The ReBranchSpec governing one named parameter group (``site``).
+
+    Works for any config carrying ``rebranch`` + ``rebranch_overrides``
+    (ArchConfig and models.cnn.CNNConfig).  Unoverridden sites fall back
+    to the config-wide spec; override entries are exact site matches.
+    """
+    for s, spec in getattr(cfg, "rebranch_overrides", ()):
+        if s == site:
+            return spec
+    return cfg.rebranch
+

@@ -17,10 +17,23 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+import dataclasses
+
 from repro.core import rebranch
 from repro.distributed.sharding import shard
 from repro.models import layers
-from repro.models.config import ArchConfig
+from repro.models.config import ArchConfig, spec_for
+
+
+def _blocks_cfg(cfg: ArchConfig) -> ArchConfig:
+    """cfg with the 'blocks' site override applied to cfg.rebranch — the
+    per-layer mapping hook for everything inside the transformer blocks
+    (attention + MLP/MoE trunks).  scan-over-layers keeps blocks uniform,
+    so 'blocks' is one site; the heads get their own sites below."""
+    spec = spec_for(cfg, "blocks")
+    if spec is cfg.rebranch:
+        return cfg
+    return dataclasses.replace(cfg, rebranch=spec)
 
 
 def _block_init(key, cfg: ArchConfig):
@@ -55,13 +68,14 @@ def _block_apply(params, x, cfg: ArchConfig, layer_idx: int,
 
 def init(key, cfg: ArchConfig):
     keys = jax.random.split(key, cfg.num_layers + 3)
+    bcfg = _blocks_cfg(cfg)
     if cfg.scan_layers:
         # stacked per-layer params (leading L dim) -> lax.scan over layers:
         # compile time is O(1) in depth (deepseek-67b: 95 layers)
-        blocks = jax.vmap(lambda k: _block_init(k, cfg))(
+        blocks = jax.vmap(lambda k: _block_init(k, bcfg))(
             jnp.stack(keys[1:cfg.num_layers + 1]))
     else:
-        blocks = [_block_init(keys[i + 1], cfg)
+        blocks = [_block_init(keys[i + 1], bcfg)
                   for i in range(cfg.num_layers)]
     params = {
         "embed": layers.init_embedding(keys[0], cfg.vocab_size,
@@ -72,10 +86,10 @@ def init(key, cfg: ArchConfig):
     if cfg.num_codebooks:      # musicgen: per-codebook readout heads
         params["codebook_head"] = rebranch.init_linear(
             keys[-1], cfg.d_model, cfg.num_codebooks * cfg.vocab_size,
-            cfg.rebranch)
+            spec_for(cfg, "codebook_head"))
     elif not cfg.tie_embeddings:
         params["lm_head"] = rebranch.init_linear(
-            keys[-1], cfg.d_model, cfg.vocab_size, cfg.rebranch)
+            keys[-1], cfg.d_model, cfg.vocab_size, spec_for(cfg, "lm_head"))
     return params
 
 
@@ -107,13 +121,14 @@ def apply_head(params, x, cfg: ArchConfig):
     x = layers.apply_rmsnorm(params["ln_f"], x, cfg.norm_eps)
     if cfg.num_codebooks:
         logits = rebranch.apply_linear(params["codebook_head"], x,
-                                       cfg.rebranch)
+                                       spec_for(cfg, "codebook_head"))
         logits = logits.reshape(*logits.shape[:-1], cfg.num_codebooks,
                                 cfg.vocab_size)
     elif cfg.tie_embeddings:
         logits = layers.embedding_as_logits(params["embed"], x, cfg)
     else:
-        logits = rebranch.apply_linear(params["lm_head"], x, cfg.rebranch)
+        logits = rebranch.apply_linear(params["lm_head"], x,
+                                       spec_for(cfg, "lm_head"))
     return logits
 
 
@@ -126,16 +141,17 @@ def features(params, batch, cfg: ArchConfig):
     x = _embed_inputs(params, batch, cfg)
     x = shard(x, "batch", "seq_sp", "embed")
     positions = batch.get("positions")
+    bcfg = _blocks_cfg(cfg)
     if cfg.scan_layers:
         def body(xx, block):
-            out = _block_apply(block, xx, cfg, 0, positions=positions)[0]
+            out = _block_apply(block, xx, bcfg, 0, positions=positions)[0]
             return shard(out, "batch", "seq_sp", "embed"), None
         if cfg.remat:
             body = jax.checkpoint(body)
         x, _ = jax.lax.scan(body, x, params["layers"])
         return x
     for i, block in enumerate(params["layers"]):
-        fn = lambda p, xx, pos, _i=i: _block_apply(p, xx, cfg, _i,
+        fn = lambda p, xx, pos, _i=i: _block_apply(p, xx, bcfg, _i,
                                                    positions=pos)[0]
         if cfg.remat:
             fn = jax.checkpoint(fn)
@@ -166,10 +182,11 @@ def prefill(params, batch, cfg: ArchConfig, cache):
     x = _embed_inputs(params, batch, cfg)
     x = shard(x, "batch", "seq_sp", "embed")
     positions = batch.get("positions")
+    bcfg = _blocks_cfg(cfg)
     if cfg.scan_layers:
         def body(xx, inp):
             block, lc = inp
-            out, nc = _block_apply(block, xx, cfg, 0, positions=positions,
+            out, nc = _block_apply(block, xx, bcfg, 0, positions=positions,
                                    cache=lc)
             return shard(out, "batch", "seq_sp", "embed"), nc
         x, new_caches = jax.lax.scan(body, x,
@@ -178,7 +195,7 @@ def prefill(params, batch, cfg: ArchConfig, cache):
         return logits, {"layers": new_caches}
     new_layer_caches = []
     for i, block in enumerate(params["layers"]):
-        x, lc = _block_apply(block, x, cfg, i, positions=positions,
+        x, lc = _block_apply(block, x, bcfg, i, positions=positions,
                              cache=cache["layers"][i])
         new_layer_caches.append(lc)
     logits = _readout(params, x[:, -1:, :], cfg)
@@ -190,17 +207,18 @@ def decode_step(params, tokens, cfg: ArchConfig, cache):
     [B,1,Q] multi-codebook)."""
     x = _token_embed(params, tokens, cfg)
     x = shard(x, "batch", None, "embed")
+    bcfg = _blocks_cfg(cfg)
     if cfg.scan_layers:
         def body(xx, inp):
             block, lc = inp
-            out, nc = _block_apply(block, xx, cfg, 0, cache=lc, decode=True)
+            out, nc = _block_apply(block, xx, bcfg, 0, cache=lc, decode=True)
             return out, nc
         x, new_caches = jax.lax.scan(body, x,
                                      (params["layers"], cache["layers"]))
         return _readout(params, x, cfg), {"layers": new_caches}
     new_layer_caches = []
     for i, block in enumerate(params["layers"]):
-        x, lc = _block_apply(block, x, cfg, i,
+        x, lc = _block_apply(block, x, bcfg, i,
                              cache=cache["layers"][i], decode=True)
         new_layer_caches.append(lc)
     logits = _readout(params, x, cfg)

@@ -1,0 +1,461 @@
+"""TrunkEngine registry + repro.deploy.compile_model.
+
+Covers the API-redesign contract:
+  * strict resolution — unknown ``trunk_impl`` raises with the registered
+    set (no silent int8_native fallback), from linears AND convs;
+  * registration/override semantics and capability gating;
+  * compile_model parity vs the old free-function path for all three
+    stock engines on a transformer and a CNN config (bit-identical);
+  * per-layer engine / ROM-vs-SRAM override mapping;
+  * BN + leaky-ReLU folded into the conv trunk epilogue vs the unfused
+    path on a DarkNet-19 block.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import deploy, engine
+from repro.core import cim as cim_lib
+from repro.core import rebranch
+from repro.engine import base as engine_base
+from repro.models import api, cnn
+from repro.models.config import ArchConfig, spec_for
+
+ENGINES = ["int8_native", "dequant", "pallas"]
+
+
+def _lm_cfg(**kw):
+    """A tiny dense transformer that runs a real CPU forward."""
+    return ArchConfig(name="t_test", family="dense", num_layers=2,
+                      d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+                      vocab_size=128, remat=False, dtype="float32", **kw)
+
+
+def _cnn_cfg(**kw):
+    return cnn.CNNConfig(name="vgg8", num_classes=13, input_size=16, **kw)
+
+
+# ---------------------------------------------------------------------------
+# registry semantics
+# ---------------------------------------------------------------------------
+
+class _ToyEngine(engine.TrunkEngine):
+    name = "toy"
+    capabilities = engine.EngineCapabilities(fidelity_modes=("ideal",))
+
+    def matmul(self, cfg, x, w_q, w_scale, *, out_axes=None):
+        return (x @ w_q.astype(x.dtype)) * w_scale.astype(x.dtype)
+
+
+class TestRegistry:
+    def test_stock_engines_registered(self):
+        assert set(ENGINES) <= set(engine.registered_names())
+
+    def test_unknown_name_lists_registered(self):
+        with pytest.raises(ValueError) as e:
+            engine.get("does_not_exist")
+        for name in ENGINES:
+            assert name in str(e.value)
+
+    def test_duplicate_registration_needs_override(self):
+        engine.register("toy_dup", _ToyEngine())
+        try:
+            with pytest.raises(ValueError, match="already registered"):
+                engine.register("toy_dup", _ToyEngine())
+            replacement = _ToyEngine()
+            engine.register("toy_dup", replacement, override=True)
+            assert engine.get("toy_dup") is replacement
+        finally:
+            engine.unregister("toy_dup")
+
+    def test_capability_gating_fidelity_mode(self):
+        """Requesting bitserial from an engine that lacks it fails loudly."""
+        engine.register("toy_ideal_only", _ToyEngine())
+        try:
+            spec = rebranch.ReBranchSpec(
+                trunk_impl="toy_ideal_only",
+                cim=cim_lib.CiMConfig(mode="bitserial"))
+            with pytest.raises(ValueError, match="bitserial"):
+                engine.resolve(spec)
+            # the supported mode resolves fine
+            ok = dataclasses.replace(spec,
+                                     cim=cim_lib.CiMConfig(mode="ideal"))
+            assert engine.resolve(ok).name == "toy"
+        finally:
+            engine.unregister("toy_ideal_only")
+
+    def test_dequant_is_fidelity_agnostic(self):
+        spec = rebranch.ReBranchSpec(trunk_impl="dequant",
+                                     cim=cim_lib.CiMConfig(mode="bitserial"))
+        assert engine.resolve(spec).name == "dequant"
+
+    def test_custom_engine_runs_in_a_layer(self):
+        """A user-registered backend plugs into apply_linear untouched."""
+        engine.register("toy_linear", _ToyEngine())
+        try:
+            spec = rebranch.ReBranchSpec(
+                trunk_impl="toy_linear",
+                cim=cim_lib.CiMConfig(mode="ideal"))
+            p = rebranch.init_linear(jax.random.PRNGKey(0), 16, 8, spec)
+            x = jax.random.normal(jax.random.PRNGKey(1), (2, 16))
+            y = rebranch.apply_linear(p, x, spec)
+            assert y.shape == (2, 8)
+        finally:
+            engine.unregister("toy_linear")
+
+
+# ---------------------------------------------------------------------------
+# strict resolution from the layers (the old silent-fallback bug)
+# ---------------------------------------------------------------------------
+
+class TestStrictResolution:
+    def test_linear_unknown_impl_raises(self):
+        spec = rebranch.ReBranchSpec(trunk_impl="int8_natve")   # typo
+        p = rebranch.init_linear(jax.random.PRNGKey(0), 16, 8, spec)
+        x = jnp.ones((2, 16))
+        with pytest.raises(ValueError, match="int8_natve"):
+            rebranch.apply_linear(p, x, spec)
+
+    def test_conv_unknown_impl_raises(self):
+        spec = rebranch.ReBranchSpec(trunk_impl="palas")        # typo
+        p = cnn.init_conv(jax.random.PRNGKey(0), 3, 8, 8, spec)
+        x = jnp.ones((1, 6, 6, 8))
+        with pytest.raises(ValueError) as e:
+            cnn.apply_conv(p, x, spec)
+        assert "palas" in str(e.value)
+        for name in ENGINES:                # message lists the valid set
+            assert name in str(e.value)
+
+    def test_compile_model_unknown_engine_raises(self):
+        with pytest.raises(ValueError, match="registered engines"):
+            deploy.compile_model(_lm_cfg(), engine="nope")
+
+    def test_compile_model_unknown_override_engine_raises(self):
+        with pytest.raises(ValueError, match="registered engines"):
+            deploy.compile_model(_cnn_cfg(),
+                                 layer_overrides={"convs.0":
+                                                  {"engine": "nope"}})
+
+    def test_compile_model_unknown_override_key_raises(self):
+        with pytest.raises(ValueError, match="unknown keys"):
+            deploy.compile_model(_cnn_cfg(),
+                                 layer_overrides={"convs.0":
+                                                  {"engin": "pallas"}})
+
+
+# ---------------------------------------------------------------------------
+# compile_model parity vs the old free-function path
+# ---------------------------------------------------------------------------
+
+class TestCompileModelParity:
+    @pytest.mark.parametrize("impl", ENGINES)
+    def test_transformer_bit_identical(self, impl):
+        cfg = _lm_cfg(rebranch=rebranch.ReBranchSpec(trunk_impl=impl))
+        key = jax.random.PRNGKey(0)
+        batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1),
+                                              (2, 8), 0, cfg.vocab_size)}
+        params_old = api.init(key, cfg)
+        logits_old = api.forward(params_old, batch, cfg)
+
+        model = deploy.compile_model(cfg)
+        params_new = model.init(key)
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)), params_old, params_new)
+        np.testing.assert_array_equal(np.asarray(logits_old),
+                                      np.asarray(model.forward(params_new,
+                                                               batch)))
+
+    @pytest.mark.parametrize("impl", ENGINES)
+    def test_cnn_bit_identical(self, impl):
+        cfg = _cnn_cfg(rebranch=rebranch.ReBranchSpec(trunk_impl=impl))
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16, 3))
+        init_fn, apply_fn = cnn.MODEL_REGISTRY[cfg.name]
+        params_old = init_fn(key, cfg)
+        out_old = apply_fn(params_old, x, cfg)
+
+        model = deploy.compile_model(cfg)
+        params_new = model.init(key)
+        np.testing.assert_array_equal(np.asarray(out_old),
+                                      np.asarray(model.forward(params_new,
+                                                               x)))
+
+    def test_engine_kwarg_overrides_config(self):
+        cfg = _cnn_cfg()                       # default int8_native
+        model = deploy.compile_model(cfg, engine="dequant")
+        assert model.engine.name == "dequant"
+        assert model.cfg.rebranch.trunk_impl == "dequant"
+
+    def test_serve_surface(self):
+        """prefill/decode_step/init_cache round-trip through the bundle."""
+        cfg = _lm_cfg()
+        model = deploy.compile_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        cache = model.init_cache(2, 8, dtype=jnp.float32)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 4), 0,
+                                  cfg.vocab_size)
+        logits, cache = model.prefill(params, {"tokens": toks}, cache)
+        assert logits.shape == (2, 1, cfg.vocab_size)
+        logits2, _ = model.decode_step(params, toks[:, :1], cache)
+        assert logits2.shape == (2, 1, cfg.vocab_size)
+
+    def test_cnn_has_no_serve_surface(self):
+        model = deploy.compile_model(_cnn_cfg())
+        with pytest.raises(NotImplementedError):
+            model.init_cache(2, 8)
+
+
+# ---------------------------------------------------------------------------
+# per-layer engine / ROM-vs-SRAM mapping
+# ---------------------------------------------------------------------------
+
+class TestLayerOverrides:
+    def test_cnn_first_layer_sram(self):
+        """Fig. 12-style mapping: the stem conv stays SRAM-trainable while
+        the rest of the trunk freezes into ROM."""
+        model = deploy.compile_model(
+            _cnn_cfg(), layer_overrides={"convs.0": {"memory": "sram"}})
+        params = model.init(jax.random.PRNGKey(0))
+        assert "rom" not in params["convs"][0]          # plain trainable
+        assert "rom" in params["convs"][1]              # frozen trunk
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 16, 3))
+        assert model.forward(params, x).shape == (1, 13)
+        # the SRAM layer's weights are in the trainable partition
+        t, f = rebranch.partition(params)
+        assert t["convs"][0]["sram"]["w"] is not None
+
+    def test_cnn_per_layer_engine(self):
+        model = deploy.compile_model(
+            _cnn_cfg(), layer_overrides={"convs.1": {"engine": "dequant"}})
+        assert model.layer_spec("convs.1").trunk_impl == "dequant"
+        assert model.layer_spec("convs.0").trunk_impl == "int8_native"
+        params = model.init(jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 16, 3))
+        assert bool(jnp.all(jnp.isfinite(model.forward(params, x))))
+
+    def test_lm_head_sram_override(self):
+        """The readout stays a plain trainable linear while blocks freeze."""
+        cfg = _lm_cfg()
+        model = deploy.compile_model(
+            cfg, layer_overrides={"lm_head": {"memory": "sram"}})
+        params = model.init(jax.random.PRNGKey(0))
+        assert "rom" not in params["lm_head"]
+        assert set(params["lm_head"]) == {"sram"}
+        batch = {"tokens": jnp.zeros((1, 4), jnp.int32)}
+        assert model.forward(params, batch).shape == (1, 4, cfg.vocab_size)
+
+    def test_blocks_cim_mode_override(self):
+        """Dropping only the blocks to per_subarray fidelity changes the
+        forward; the unmapped config does not."""
+        cfg = _lm_cfg()
+        base = deploy.compile_model(cfg)
+        params = base.init(jax.random.PRNGKey(0))
+        batch = {"tokens": jnp.arange(8, dtype=jnp.int32).reshape(1, 8)}
+        y0 = base.forward(params, batch)
+        mapped = deploy.compile_model(
+            cfg, layer_overrides={"blocks": {"cim": "per_subarray"}})
+        y1 = mapped.forward(params, batch)
+        assert float(jnp.max(jnp.abs(y0 - y1))) > 0
+        again = deploy.compile_model(cfg)
+        np.testing.assert_array_equal(np.asarray(y0),
+                                      np.asarray(again.forward(params,
+                                                               batch)))
+
+    def test_spec_accepted_verbatim(self):
+        spec = rebranch.ReBranchSpec(enabled=False)
+        model = deploy.compile_model(_cnn_cfg(),
+                                     layer_overrides={"convs.2": spec})
+        assert model.layer_spec("convs.2") is spec
+
+    def test_unknown_site_raises(self):
+        """Typo'd / unwired site names fail loudly (no silent no-op)."""
+        with pytest.raises(ValueError, match="conv.0"):
+            deploy.compile_model(_cnn_cfg(),
+                                 layer_overrides={"conv.0":        # typo
+                                                  {"memory": "sram"}})
+        with pytest.raises(ValueError, match="not wired"):
+            deploy.compile_model(_lm_cfg(),
+                                 layer_overrides={"pred": {"memory": "sram"}})
+
+    def test_ssm_family_overrides_not_wired(self):
+        cfg = ArchConfig(name="s_test", family="ssm", num_layers=1,
+                         d_model=16, ssm_state=4, vocab_size=32)
+        assert deploy.valid_sites(cfg) == set()
+        with pytest.raises(ValueError, match="no per-site overrides"):
+            deploy.compile_model(cfg,
+                                 layer_overrides={"lm_head":
+                                                  {"memory": "sram"}})
+        deploy.compile_model(cfg)           # no overrides: fine
+
+    def test_valid_sites_enumeration(self):
+        assert deploy.valid_sites(_cnn_cfg()) == {
+            f"convs.{i}" for i in range(6)}
+        rs = deploy.valid_sites(cnn.CNNConfig(name="resnet18"))
+        assert "stem" in rs and "stages.1.0.proj" in rs
+        assert "stages.0.0.proj" not in rs      # stage 0 has no projection
+        assert deploy.valid_sites(_lm_cfg()) == {"blocks", "lm_head"}
+
+    def test_engine_instance_conflict_raises(self):
+        """Passing an instance whose name is taken by a DIFFERENT engine
+        must not silently swap the registry entry under other models."""
+        stock = engine.get("dequant")
+
+        class _Impostor(engine.TrunkEngine):
+            name = "dequant"
+
+        with pytest.raises(ValueError, match="conflicts"):
+            deploy.compile_model(_cnn_cfg(), engine=_Impostor())
+        assert engine.get("dequant") is stock   # registry untouched
+        # the registered instance itself is accepted
+        assert deploy.compile_model(_cnn_cfg(),
+                                    engine=stock).engine is stock
+
+    def test_overrides_are_jit_static_safe(self):
+        cfg = deploy.compile_model(
+            _cnn_cfg(), layer_overrides={"convs.0": {"memory": "sram"}}).cfg
+        hash(cfg)                                       # hashable (static)
+        assert spec_for(cfg, "convs.0").enabled is False
+        assert spec_for(cfg, "convs.3") is cfg.rebranch
+
+
+# ---------------------------------------------------------------------------
+# BN + leaky-ReLU folded into the conv trunk epilogue
+# ---------------------------------------------------------------------------
+
+class TestEpilogueFusion:
+    @pytest.mark.parametrize("impl", ENGINES)
+    def test_darknet_block_parity(self, impl):
+        """conv+BN+leaky on a DarkNet-19 block: fused epilogue ==
+        unfused (inference-style BN), per engine."""
+        spec = rebranch.ReBranchSpec(trunk_impl=impl)
+        key = jax.random.PRNGKey(0)
+        c, k = cnn.DARKNET19[2]                        # (64, 3) block
+        p = cnn.init_conv(key, k, 32, c, spec)
+        p["sram"]["core"] = jax.random.normal(
+            jax.random.PRNGKey(2), p["sram"]["core"].shape) * 0.05
+        bn = cnn._bn_init(c)
+        bn["sram"]["mean"] = jax.random.normal(jax.random.PRNGKey(3), (c,))
+        bn["sram"]["var"] = jax.nn.softplus(
+            jax.random.normal(jax.random.PRNGKey(4), (c,)))
+        bn["sram"]["scale"] = 1.0 + 0.1 * jax.random.normal(
+            jax.random.PRNGKey(5), (c,))
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 32))
+
+        unfused = cnn._leaky(cnn._bn_apply(bn, cnn.apply_conv(p, x, spec)))
+        fused = cnn.apply_conv(p, x, spec,
+                               epilogue=cnn.bn_epilogue(bn, "leaky_relu"))
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_resnet_model_fused_flag(self):
+        """ResNet-18 honours fuse_bn_act too (act fuses only where it
+        legally follows the conv; bn2/proj stay affine-only)."""
+        cfg = cnn.CNNConfig(name="resnet18", num_classes=7, input_size=16)
+        params = cnn.init_resnet18(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 16, 3))
+        y0 = cnn.apply_resnet18(params, x, cfg)
+        y1 = cnn.apply_resnet18(params, x,
+                                dataclasses.replace(cfg, fuse_bn_act=True))
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y0),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_darknet_model_fused_flag(self):
+        cfg = cnn.CNNConfig(name="tiny_yolo", input_size=64)
+        params = cnn.init_tiny_yolo(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 64, 3))
+        y0 = cnn.apply_darknet(params, x, cfg)
+        y1 = cnn.apply_darknet(params, x,
+                               dataclasses.replace(cfg, fuse_bn_act=True))
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y0),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_epilogue_gradients_flow_to_branch_and_bn_bias(self):
+        """The fused path keeps the branch core (and the BN bias riding
+        the epilogue) trainable."""
+        spec = rebranch.ReBranchSpec()
+        p = cnn.init_conv(jax.random.PRNGKey(0), 3, 16, 16, spec)
+        bn = cnn._bn_init(16)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 6, 6, 16))
+        t, f = rebranch.partition({"conv": p, "bn": bn})
+
+        def loss(t):
+            m = rebranch.combine(t, f)
+            y = cnn.apply_conv(m["conv"], x, spec,
+                               epilogue=cnn.bn_epilogue(m["bn"],
+                                                        "leaky_relu"))
+            return jnp.sum(y ** 2)
+
+        g = jax.grad(loss)(t)
+        assert float(jnp.sum(jnp.abs(g["conv"]["sram"]["core"]))) > 0
+        assert float(jnp.sum(jnp.abs(g["bn"]["sram"]["bias"]))) > 0
+
+    def test_engine_without_epilogue_support_falls_back(self):
+        """An engine with capabilities.epilogue=False never receives one;
+        the layer applies BN+act itself and the result still matches."""
+        class _NoEpConv(engine.TrunkEngine):
+            name = "toy_noep"
+            capabilities = engine.EngineCapabilities(epilogue=False)
+
+            def conv(self, cfg, x, w_q, w_scale, *, stride=1,
+                     padding="SAME", epilogue=None):
+                assert epilogue is None, "layer leaked an epilogue"
+                return rebranch.trunk_conv(cfg, stride, padding,
+                                           x, w_q, w_scale)
+
+        engine.register("toy_noep", _NoEpConv())
+        try:
+            spec = rebranch.ReBranchSpec(trunk_impl="toy_noep")
+            p = cnn.init_conv(jax.random.PRNGKey(0), 3, 16, 16, spec)
+            p["sram"]["core"] = jax.random.normal(
+                jax.random.PRNGKey(2), p["sram"]["core"].shape) * 0.05
+            bn = cnn._bn_init(16)
+            bn["sram"]["mean"] = jax.random.normal(jax.random.PRNGKey(3),
+                                                   (16,))
+            x = jax.random.normal(jax.random.PRNGKey(1), (1, 6, 6, 16))
+            fused = cnn.apply_conv(p, x, spec,
+                                   epilogue=cnn.bn_epilogue(bn,
+                                                            "leaky_relu"))
+            ref_spec = rebranch.ReBranchSpec()      # int8_native reference
+            want = cnn._leaky(cnn._bn_apply(bn,
+                                            cnn.apply_conv(p, x, ref_spec)))
+            np.testing.assert_allclose(np.asarray(fused), np.asarray(want),
+                                       rtol=1e-5, atol=1e-5)
+        finally:
+            engine.unregister("toy_noep")
+
+    def test_epilogue_on_plain_conv(self):
+        """enabled=False layers honour the epilogue too (pred head)."""
+        spec = rebranch.ReBranchSpec(enabled=False)
+        p = cnn.init_conv(jax.random.PRNGKey(0), 1, 8, 8, spec)
+        bn = cnn._bn_init(8)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 4, 4, 8))
+        fused = cnn.apply_conv(p, x, spec, epilogue=cnn.bn_epilogue(bn,
+                                                                    "relu"))
+        unfused = jax.nn.relu(cnn._bn_apply(bn, cnn.apply_conv(p, x, spec)))
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# engine base helpers
+# ---------------------------------------------------------------------------
+
+class TestEpilogueHelpers:
+    def test_finish_none_passthrough(self):
+        y = jnp.ones((4,))
+        assert engine_base.finish(y, None) is y
+        assert engine_base.activate(y, None) is y
+
+    def test_unknown_activation_raises(self):
+        ep = engine_base.ConvEpilogue(act="gelu")
+        with pytest.raises(ValueError, match="gelu"):
+            engine_base.activate(jnp.ones((2,)), ep)
+
+    def test_without_act(self):
+        ep = engine_base.ConvEpilogue(scale=jnp.ones((2,)), act="relu")
+        assert ep.without_act().act is None
+        assert ep.without_act().scale is ep.scale
