@@ -1,0 +1,101 @@
+"""CI benchmark regression gate: current run vs the checked-in baseline.
+
+Compares a ``benchmarks.run --json`` output against the newest
+``BENCH_*.json`` at the repo root and fails (exit 1) when any
+kernel-parity metric — the ``conv_kernel`` section, where the fused
+Pallas kernels race the XLA baseline on identical layers — regresses by
+more than ``--max-ratio`` (default 2x) in wall time.
+
+Only metrics present in BOTH files are compared (a --fast run gates
+against the overlapping subset of a full-run baseline), and metrics
+below ``--min-us`` in the baseline are skipped: timer noise at the
+microsecond floor is not a regression.  Analytic sections (area map,
+energy, roofline) carry wall_us=0 and are never gated — their values
+are model outputs, not performance.
+
+Usage:
+    python -m benchmarks.compare bench.json [--baseline BENCH_4.json]
+        [--max-ratio 2.0] [--min-us 100]
+"""
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+# sections whose wall_us measures kernel execution (gate-worthy); the
+# rest are analytic tables where wall time is incidental
+GATED_SECTIONS = ("conv_kernel",)
+
+
+def latest_baseline(root: str) -> str | None:
+    """The highest-numbered BENCH_<n>.json at the repo root."""
+    paths = glob.glob(os.path.join(root, "BENCH_*.json"))
+
+    def key(p):
+        m = re.search(r"BENCH_(\d+)\.json$", p)
+        return int(m.group(1)) if m else -1
+
+    return max(paths, key=key) if paths else None
+
+
+def load_metrics(path: str) -> dict[str, dict]:
+    with open(path) as f:
+        return {(r["section"], r["metric"]): r for r in json.load(f)}
+
+
+def compare(current: dict, baseline: dict, *, max_ratio: float,
+            min_us: float) -> list[str]:
+    """Regression messages for every gated metric exceeding the ratio."""
+    problems = []
+    for key, base in baseline.items():
+        if key[0] not in GATED_SECTIONS or base["wall_us"] < min_us:
+            continue
+        cur = current.get(key)
+        if cur is None:
+            continue                     # --fast subset vs full baseline
+        ratio = cur["wall_us"] / base["wall_us"]
+        if ratio > max_ratio:
+            problems.append(
+                f"{key[0]}/{key[1]}: {cur['wall_us']:.0f}us vs baseline "
+                f"{base['wall_us']:.0f}us ({ratio:.2f}x > {max_ratio}x)")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="benchmarks.run --json output to check")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline json (default: newest BENCH_*.json)")
+    ap.add_argument("--max-ratio", type=float, default=2.0)
+    ap.add_argument("--min-us", type=float, default=100.0,
+                    help="skip baseline metrics below this (timer noise)")
+    args = ap.parse_args(argv)
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    baseline_path = args.baseline or latest_baseline(root)
+    if baseline_path is None:
+        print("no BENCH_*.json baseline found — nothing to gate against")
+        return 0
+
+    current = load_metrics(args.current)
+    baseline = load_metrics(baseline_path)
+    problems = compare(current, baseline, max_ratio=args.max_ratio,
+                       min_us=args.min_us)
+    n_gated = sum(1 for k, r in baseline.items()
+                  if k[0] in GATED_SECTIONS and r["wall_us"] >= args.min_us
+                  and k in current)
+    print(f"compared {n_gated} kernel metrics against "
+          f"{os.path.basename(baseline_path)}")
+    for p in problems:
+        print(f"REGRESSION: {p}")
+    if problems:
+        return 1
+    print("benchmark gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,7 +17,6 @@ os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
 
 import argparse
 import dataclasses
-import sys
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9

@@ -34,7 +34,6 @@ def model_params_and_active(arch: str) -> tuple[float, float]:
     total = sum(l.size for l in jax.tree.leaves(shapes))
     if cfg.family == "moe":
         # active = non-expert params + activated experts (+shared)
-        import numpy as np
         leaves = jax.tree_util.tree_flatten_with_path(shapes)[0]
         expert = sum(l.size for p, l in leaves
                      if "experts" in jax.tree_util.keystr(p))
@@ -69,6 +68,12 @@ def analyse(results_path: str = "dryrun_results.json") -> list[dict]:
     for rec in records:
         r = roofline_terms(rec)
         arch = rec["arch"]
+        if rec["kind"] == "cnn_serve":
+            # CNN cells: no 6ND token convention — roofline terms only
+            r["model_flops"] = None
+            r["useful_frac"] = float("nan")
+            out.append(r)
+            continue
         if arch not in cache:
             cache[arch] = model_params_and_active(arch)
         n_total, n_active = cache[arch]

@@ -9,7 +9,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import optim
 from repro.core import rebranch

@@ -26,7 +26,7 @@ import threading
 import jax
 import numpy as np
 
-from repro.core import rebranch, rom
+from repro.core import rom
 
 
 def _flatten(tree):

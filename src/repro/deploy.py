@@ -38,12 +38,14 @@ shims for existing callers; new code should compile once and reuse.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any
 
 from repro import engine as engine_lib
 from repro.core import cim as cim_lib
 from repro.core.rebranch import ReBranchSpec
+from repro.distributed import sharding as shd
 from repro.engine.base import TrunkEngine
 from repro.models import api, cnn
 from repro.models.config import spec_for
@@ -117,12 +119,25 @@ class CompiledModel:
     (cnn.CNNConfig) expose init/forward (there is no KV cache to manage).
     """
 
-    def __init__(self, cfg, engine: TrunkEngine):
+    def __init__(self, cfg, engine: TrunkEngine, mesh=None):
         self.cfg = cfg
         self.engine = engine
+        self.mesh = mesh
         self._is_cnn = isinstance(cfg, cnn.CNNConfig)
         if self._is_cnn:
             self._cnn_init, self._cnn_apply = cnn.MODEL_REGISTRY[cfg.name]
+
+    @contextlib.contextmanager
+    def _scope(self):
+        """Activate the bound mesh (+ sharding rules) around every model
+        call, so compile-time mesh binding works from plain jit sites —
+        jax.jit(model.forward) traces under the mesh without the caller
+        managing ``use_mesh``.  No-op when unbound (mesh=None)."""
+        if self.mesh is None:
+            yield
+        else:
+            with shd.use_mesh(self.mesh), self.mesh:
+                yield
 
     # -- mapping introspection ------------------------------------------
     def layer_spec(self, site: str) -> ReBranchSpec:
@@ -131,32 +146,42 @@ class CompiledModel:
 
     # -- the model surface ----------------------------------------------
     def init(self, key):
-        if self._is_cnn:
-            return self._cnn_init(key, self.cfg)
-        return api.init(key, self.cfg)
+        with self._scope():
+            if self._is_cnn:
+                return self._cnn_init(key, self.cfg)
+            return api.init(key, self.cfg)
 
     def forward(self, params, batch):
         """Train-time forward: logits for LMs, head output for CNNs
         (batch is the token dict for LMs, the NHWC image for CNNs)."""
-        if self._is_cnn:
-            return self._cnn_apply(params, batch, self.cfg)
-        return api.forward(params, batch, self.cfg)
+        with self._scope():
+            if self._is_cnn:
+                # constrain the NHWC input onto the serving layout (batch
+                # over pod, spatial H over data — the halo-exchange conv's
+                # native sharding); no-op unbound or on a 1-device mesh
+                batch = shd.shard(batch, "cnn_batch", "cnn_h")
+                return self._cnn_apply(params, batch, self.cfg)
+            return api.forward(params, batch, self.cfg)
 
     def features(self, params, batch):
         self._lm_only("features")
-        return api.features(params, batch, self.cfg)
+        with self._scope():
+            return api.features(params, batch, self.cfg)
 
     def apply_head(self, params, x):
         self._lm_only("apply_head")
-        return api.apply_head(params, x, self.cfg)
+        with self._scope():
+            return api.apply_head(params, x, self.cfg)
 
     def prefill(self, params, batch, cache):
         self._lm_only("prefill")
-        return api.prefill(params, batch, self.cfg, cache)
+        with self._scope():
+            return api.prefill(params, batch, self.cfg, cache)
 
     def decode_step(self, params, tokens, cache):
         self._lm_only("decode_step")
-        return api.decode_step(params, tokens, self.cfg, cache)
+        with self._scope():
+            return api.decode_step(params, tokens, self.cfg, cache)
 
     def init_cache(self, batch: int, max_len: int, dtype=None):
         self._lm_only("init_cache")
@@ -171,11 +196,15 @@ class CompiledModel:
     def __repr__(self):
         kind = "cnn" if self._is_cnn else self.cfg.family
         n_over = len(getattr(self.cfg, "rebranch_overrides", ()))
+        mesh = "" if self.mesh is None else \
+            " mesh=" + "x".join(str(self.mesh.shape[a])
+                                for a in self.mesh.axis_names)
         return (f"<CompiledModel {self.cfg.name!r} ({kind}) "
-                f"engine={self.engine.name!r} overrides={n_over}>")
+                f"engine={self.engine.name!r} overrides={n_over}{mesh}>")
 
 
-def compile_model(cfg, *, engine=None, layer_overrides=None) -> CompiledModel:
+def compile_model(cfg, *, engine=None, layer_overrides=None,
+                  mesh=None) -> CompiledModel:
     """Resolve engines + per-layer ROM/SRAM mapping and bundle the model.
 
     cfg: ArchConfig (any LM family) or models.cnn.CNNConfig.
@@ -186,6 +215,12 @@ def compile_model(cfg, *, engine=None, layer_overrides=None) -> CompiledModel:
         'convs.N' / 'stem' / 'stages.S.B.convK' / 'head.N' for the CNNs;
         :func:`valid_sites` enumerates them and unknown sites raise).
         Values may also be full ReBranchSpec instances.
+    mesh: optional jax Mesh the model is deployed onto.  Every model call
+        then traces under ``sharding.use_mesh(mesh)`` — the launch/mesh
+        flow already does this for LM steps, so the parameter mainly
+        serves CNN configs: the NHWC input is constrained to the
+        batch-over-pod / H-over-data serving layout and sharded engines
+        ('pallas_sharded') find their mesh without caller ceremony.
 
     Every engine named anywhere in the mapping is resolved through the
     strict registry NOW — unknown engines and unsupported fidelity modes
@@ -232,4 +267,4 @@ def compile_model(cfg, *, engine=None, layer_overrides=None) -> CompiledModel:
 
     cfg = dataclasses.replace(cfg, rebranch=base,
                               rebranch_overrides=tuple(sorted(merged.items())))
-    return CompiledModel(cfg, eng)
+    return CompiledModel(cfg, eng, mesh=mesh)

@@ -41,6 +41,14 @@ DEFAULT_RULES: dict[str, tuple[str, ...]] = {
     "kv_seq": ("data", "model"),    # long-context cache: shard sequence
     "ssm_inner": ("model",),
     "cnn_chan": ("model",),
+    # CNN serving (halo-exchange sharded conv, engine 'pallas_sharded'):
+    # NHWC activations shard spatial H over the data axis; the kernel-halo
+    # rows exchanged between neighbour shards inherit this same spec (a
+    # halo buffer is a [N, halo_rows, W, C] slice of the activation).  W
+    # is never sharded — a 2-D halo would double the exchange count for
+    # no memory win at detection aspect ratios.
+    "cnn_batch": ("pod",),          # image batch rides the pod axis
+    "cnn_h": ("data",),             # spatial H: halo-exchange sharding
 }
 
 _state = threading.local()
@@ -75,6 +83,24 @@ def use_mesh(mesh: Mesh | None, rules: dict | None = None):
     finally:
         _state.mesh = old_mesh
         _state.rules = old_rules
+
+
+def mesh_axis_for(logical: str, mesh: Mesh | None = None) -> str | None:
+    """The first mesh axis (rule order) a logical axis maps onto, or None.
+
+    Unlike :func:`logical_to_spec` this returns the bare axis *name* —
+    what shard_map callers (the halo-exchange conv engine) need to build
+    in/out specs and ppermute over the right axis.  Axes of size 1 are
+    skipped: sharding over them is a no-op and the caller should take
+    its unsharded path.
+    """
+    mesh = mesh or current_mesh()
+    if mesh is None:
+        return None
+    for a in current_rules().get(logical, ()):
+        if a in mesh.axis_names and mesh.shape[a] > 1:
+            return a
+    return None
 
 
 def logical_to_spec(axes: tuple[str | None, ...],

@@ -2,10 +2,11 @@
 
 One network, many substrates: every frozen-trunk matmul/conv in the repo
 dispatches through a named :class:`TrunkEngine` resolved from
-``ReBranchSpec.trunk_impl``.  The three stock engines (``int8_native``,
-``dequant``, ``pallas``) register themselves on import; new backends (a
-fused bitserial TPU kernel, a halo-exchange sharded conv, ...) plug in
-with :func:`register` — no string surgery in core/models/kernels.
+``ReBranchSpec.trunk_impl``.  The stock engines (``int8_native``,
+``dequant``, ``pallas``, plus the halo-exchange ``pallas_sharded``)
+register themselves on import; new backends (a fused bitserial TPU
+kernel, ...) plug in with :func:`register` — no string surgery in
+core/models/kernels.
 
     from repro import engine
     engine.register("my_backend", MyEngine())
@@ -24,6 +25,7 @@ from repro.engine.registry import (
     get, register, registered_names, resolve, unregister,
 )
 from repro.engine import builtin as _builtin   # registers the stock engines
+from repro.engine import sharded as _sharded   # registers 'pallas_sharded'
 
 __all__ = [
     "ConvEpilogue", "EngineCapabilities", "TrunkEngine",

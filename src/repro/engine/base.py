@@ -21,7 +21,6 @@ import dataclasses
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,11 +44,17 @@ class EngineCapabilities:
     epilogue: whether conv() honours a :class:`ConvEpilogue` (per-channel
         scale riding the trunk's dequant multiply, bias + activation in
         the same fused pass).
+    sharded_ops: which primitives the engine runs natively under
+        shard_map on a multi-device mesh ('matmul'/'conv'); empty means
+        single-device (GSPMD still partitions around it).  ADVISORY like
+        ``grads``/``devices`` — an op not listed is still correct, it
+        just delegates or runs replicated.
     """
     fidelity_modes: tuple | None = ("ideal", "per_subarray", "bitserial")
     grads: bool = True
     devices: tuple = ("cpu", "gpu", "tpu")
     epilogue: bool = False
+    sharded_ops: tuple = ()
 
 
 @dataclasses.dataclass(frozen=True)

@@ -18,6 +18,11 @@ are bugs in the system.  Usage:
 
   PYTHONPATH=src python -m repro.launch.dryrun [--arch yi_34b]
       [--shape train_4k] [--multi-pod] [--single-pod] [--out out.json]
+
+Beyond the LM cells, ``--shape cnn_serve`` (also part of the full sweep)
+lowers the H-sharded CNN inference cells (DarkNet-19 / ResNet-18 on the
+'pallas_sharded' halo-exchange engine, see CNN_SERVE) on a small
+data-axis mesh — the halo traffic lands in the collective-permute bytes.
 """
 
 import argparse
@@ -31,14 +36,13 @@ import traceback
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro import configs, optim
 from repro.core import rebranch
 from repro.distributed import sharding as shd
 from repro.launch import steps as steps_lib
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_cnn_serve_mesh, make_production_mesh
 
 
 # ---------------------------------------------------------------------------
@@ -131,13 +135,8 @@ def lower_cell(arch: str, shape_name: str, mesh, *, donate: bool = True):
         compiled = lowered.compile()
         t_compile = time.time() - t0
 
-        mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
-        txt = compiled.as_text()
-        # correct per-device costs incl. while-loop trip counts (XLA's own
-        # cost_analysis counts scan bodies once — see hlo_cost.py)
-        from repro.launch import hlo_cost
-        costs = hlo_cost.analyse_text(txt)
+        txt = compiled.as_text()        # rendered once; multi-hundred-MB
+        rec = analyse_compiled(compiled, mesh, hlo_text=txt)
         hlo_dir = _os.environ.get("DRYRUN_HLO_DIR")
         if hlo_dir:
             _os.makedirs(hlo_dir, exist_ok=True)
@@ -147,13 +146,30 @@ def lower_cell(arch: str, shape_name: str, mesh, *, donate: bool = True):
                     "wt") as f:
                 f.write(txt)
 
-    n_dev = mesh.size
-    rec = {
-        "arch": arch, "shape": shape_name, "kind": kind,
+    rec.update(
+        arch=arch, shape=shape_name, kind=kind,
+        seq=seq, global_batch=gbatch,
+        lower_s=round(t_lower, 1), compile_s=round(t_compile, 1))
+    return rec
+
+
+def analyse_compiled(compiled, mesh, hlo_text: str | None = None) -> dict:
+    """The shared analysis fields of one compiled cell (LM or CNN):
+    memory analysis, HLO cost (incl. while-loop trip counts — XLA's own
+    cost_analysis counts scan bodies once, see hlo_cost.py), and the
+    collective-byte breakdown parsed from the partitioned HLO.  Pass
+    ``hlo_text`` if the caller already rendered ``compiled.as_text()``
+    (it is hundreds of MB for multi-pod cells)."""
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):          # per-computation list form
+        cost = cost[0] if cost else {}
+    from repro.launch import hlo_cost
+    costs = hlo_cost.analyse_text(hlo_text if hlo_text is not None
+                                  else compiled.as_text())
+    return {
         "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
-        "devices": n_dev,
-        "seq": seq, "global_batch": gbatch,
-        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "devices": mesh.size,
         "flops": costs["flops"],
         "hbm_bytes": costs["hbm_bytes"],
         "xla_flops": float(cost.get("flops", -1)),
@@ -167,6 +183,60 @@ def lower_cell(arch: str, shape_name: str, mesh, *, donate: bool = True):
             + getattr(mem, "output_size_in_bytes", 0)
             + getattr(mem, "temp_size_in_bytes", 0)),
     }
+
+
+# ---------------------------------------------------------------------------
+# cnn_serve cells: H-sharded CNN inference on the halo-exchange engine
+# ---------------------------------------------------------------------------
+
+# model -> (input_size, global_batch).  Sizes are serving-realistic for the
+# halo math (several pool stages deep the per-device H hits the general /
+# uneven path) while keeping interpret-mode Pallas compile times sane on
+# the forced host devices.
+CNN_SERVE = {
+    "darknet19": (64, 8),
+    "resnet18": (64, 8),
+}
+CNN_SERVE_DEVICES = 8
+
+
+def lower_cnn_cell(name: str, mesh):
+    """Lower + compile one H-sharded CNN forward on the 'pallas_sharded'
+    engine; returns a record with the same analysis fields as LM cells
+    (memory / HLO cost / collective bytes — the halo exchange shows up as
+    collective-permute traffic)."""
+    import dataclasses as _dc
+
+    from repro import deploy
+    from repro.core import cim as cim_lib
+    from repro.models import cnn as cnn_lib
+
+    size, gbatch = CNN_SERVE[name]
+    spec = _dc.replace(rebranch.ReBranchSpec(),
+                       trunk_impl="pallas_sharded",
+                       cim=cim_lib.CiMConfig(mode="ideal"))
+    cfg = cnn_lib.CNNConfig(name=name, input_size=size, rebranch=spec,
+                            fuse_bn_act=True)
+    model = deploy.compile_model(cfg, mesh=mesh)
+
+    t0 = time.time()
+    param_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    x = jax.ShapeDtypeStruct((gbatch, size, size, 3), jnp.float32)
+    with shd.use_mesh(mesh), mesh:
+        in_sh = NamedSharding(mesh, shd.logical_to_spec(
+            ("cnn_batch", "cnn_h"), mesh))
+        jitted = jax.jit(model.forward, in_shardings=(None, in_sh))
+        lowered = jitted.lower(param_shapes, x)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        rec = analyse_compiled(compiled, mesh)
+
+    rec.update(
+        arch=name, shape="cnn_serve", kind="cnn_serve",
+        seq=size, global_batch=gbatch,
+        lower_s=round(t_lower, 1), compile_s=round(t_compile, 1))
     return rec
 
 
@@ -183,6 +253,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     archs = [args.arch] if args.arch else configs.ALL_ARCHS
+    cnn_archs = [a for a in archs if a in CNN_SERVE]
+    lm_archs = [a for a in archs if a not in CNN_SERVE]
     meshes = []
     if not args.multi_pod:
         meshes.append(("single_pod", make_production_mesh(multi_pod=False)))
@@ -190,7 +262,7 @@ def main(argv=None):
         meshes.append(("multi_pod", make_production_mesh(multi_pod=True)))
 
     records, failures = [], []
-    for arch in archs:
+    for arch in (lm_archs if args.shape != "cnn_serve" else []):
         for shape_name, *_ in configs.cells(arch):
             if args.shape and shape_name != args.shape:
                 continue
@@ -211,6 +283,29 @@ def main(argv=None):
                     failures.append((tag, repr(e)))
                     print(f"[FAIL] {tag}: {e!r}", flush=True)
                     traceback.print_exc()
+
+    # cnn_serve family: included in full sweeps and via --shape cnn_serve /
+    # --arch darknet19; runs on its own small H-sharding mesh, not the LM
+    # production meshes (the trunk is fixed ROM — spatial, not tensor,
+    # parallelism is the scaling axis)
+    if args.shape in (None, "cnn_serve"):
+        cnn_mesh = make_cnn_serve_mesh(CNN_SERVE_DEVICES)
+        for name in (cnn_archs if args.arch else list(CNN_SERVE)):
+            tag = f"{name} x cnn_serve x cnn_{CNN_SERVE_DEVICES}dev"
+            try:
+                rec = lower_cnn_cell(name, cnn_mesh)
+                rec["mesh_name"] = f"cnn_{CNN_SERVE_DEVICES}dev"
+                records.append(rec)
+                print(f"[ok] {tag}: "
+                      f"peak={rec['peak_bytes_per_dev']/2**30:.2f}GiB/dev "
+                      f"flops={rec['flops']:.3g} "
+                      f"coll={rec['collective_bytes']/2**20:.1f}MiB "
+                      f"(lower {rec['lower_s']}s compile "
+                      f"{rec['compile_s']}s)", flush=True)
+            except Exception as e:
+                failures.append((tag, repr(e)))
+                print(f"[FAIL] {tag}: {e!r}", flush=True)
+                traceback.print_exc()
 
     if args.out:
         with open(args.out, "w") as f:

@@ -17,3 +17,13 @@ def make_local_mesh():
     """Whatever devices this process actually has, on the data axis."""
     n = len(jax.devices())
     return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def make_cnn_serve_mesh(n_data: int = 8):
+    """CNN serving mesh for the halo-exchange sharded conv engine:
+    spatial H shards over ``data`` (rule ``"cnn_h"``), channels could
+    ride ``model`` (kept 1 — trunk weights live whole in ROM macros).
+    Uses the first ``n_data`` devices so it composes with the dry-run's
+    512 forced host devices."""
+    return jax.make_mesh((n_data, 1), ("data", "model"),
+                         devices=jax.devices()[:n_data])

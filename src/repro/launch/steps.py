@@ -10,7 +10,6 @@ cell and the train driver executes for real:
 
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -22,8 +22,6 @@ import sys
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro import configs, optim
 from repro.checkpoint import manager as ckpt

@@ -22,7 +22,6 @@ feature-map sweeps) — numerically the same inference-style BN.
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +30,7 @@ import numpy as np
 from repro import engine as engine_lib
 from repro.core import rebranch as rebranch_lib
 from repro.core.rebranch import ReBranchSpec
+from repro.distributed.sharding import shard
 from repro.engine import base as engine_base
 from repro.models.config import spec_for
 
@@ -40,6 +40,16 @@ from repro.models.config import spec_for
 # ---------------------------------------------------------------------------
 
 _conv = rebranch_lib.conv_nhwc
+
+
+def _pool(x):
+    """2x2 max pool + re-constrain onto the CNN serving layout (batch over
+    pod, spatial H over data — the halo-exchange conv's native sharding).
+    The constraint keeps GSPMD from drifting to a replicated layout after
+    the windowed reduction; no-op without a mesh."""
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                              (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    return shard(x, "cnn_batch", "cnn_h")
 
 
 def init_conv(key, k: int, c_in: int, c_out: int, spec: ReBranchSpec,
@@ -206,8 +216,7 @@ def apply_vgg8(params, x, cfg: CNNConfig):
         else:
             x = jax.nn.relu(_bn_apply(bn, apply_conv(conv, x, spec)))
         if i % 2 == 1:
-            x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
-                                      (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+            x = _pool(x)
     x = x.reshape(x.shape[0], -1)
     return x @ params["fc"]["sram"]["w"] + params["fc"]["sram"]["b"]
 
@@ -278,7 +287,7 @@ def apply_resnet18(params, x, cfg: CNNConfig):
             if "proj" in blk:
                 sc = conv_bn(blk["proj"], blk["proj_bn"], x,
                              spec_for(cfg, f"{site}.proj"), st)
-            x = jax.nn.relu(h + sc)
+            x = shard(jax.nn.relu(h + sc), "cnn_batch", "cnn_h")
     x = jnp.mean(x, axis=(1, 2))
     return x @ params["fc"]["sram"]["w"] + params["fc"]["sram"]["b"]
 
@@ -353,8 +362,7 @@ def apply_darknet(params, x, cfg: CNNConfig):
     i = 0
     for item in plan:
         if item == "M":
-            x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
-                                      (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+            x = _pool(x)
         else:
             x = conv_bn_leaky(params["convs"][i], params["bns"][i], x,
                               spec_for(cfg, f"convs.{i}"))

@@ -8,7 +8,6 @@ compression this shrinks optimizer memory by ~16x vs full fine-tuning
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

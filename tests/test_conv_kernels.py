@@ -21,7 +21,7 @@ import numpy as np
 import pytest
 
 from repro.core import cim as cim_lib
-from repro.core import quant, rebranch
+from repro.core import rebranch
 from repro.kernels import ops, ref
 from repro.kernels.rebranch_conv import (
     cim_conv_pallas, rebranch_conv_pallas, trunk_conv_pallas,

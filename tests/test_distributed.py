@@ -2,13 +2,11 @@
 programs in a subprocess with forced host devices (kept OUT of this
 process so other tests see 1 device, per the dry-run rule)."""
 
-import json
 import os
 import subprocess
 import sys
 import textwrap
 
-import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

@@ -3,7 +3,6 @@ scan, int8 dot, conv) and collective-byte extraction."""
 
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.launch import hlo_cost
 

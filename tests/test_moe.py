@@ -2,12 +2,9 @@
 must reproduce a direct per-token top-k computation when capacity covers
 demand, and degrade by dropping (never corrupting) when it doesn't."""
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.models import moe
 from repro.models.config import ArchConfig
