@@ -92,7 +92,23 @@ def run() -> list[str]:
         for impl, ms in times.items():
             lines.append(f"conv_kernel_l{i}_{impl},{ms * 1e3:.0f},"
                          f"cin={c_in} cout={c_out} k={k} hw={hw}")
+    lines.append(sketch_flops_line())
     return lines
+
+
+def sketch_flops_line(c_in: int = 1024, k: int = 3, d_ratio: int = 4) -> str:
+    """The structured-compress win as data: branch-sketch FLOPs per patch
+    row for a wide DarkNet-19 layer, per-tap structured dot (what
+    kernels.rebranch_conv now runs) vs the old dense ``kron(I_taps, C)``
+    densification.  The ratio is exactly ``taps`` (k*k), independent of
+    channel width — analytic, wall_us=0, never regression-gated."""
+    taps, c_c = k * k, c_in // d_ratio
+    structured = 2 * taps * c_in * c_c
+    dense = 2 * taps * taps * c_in * c_c
+    return (f"conv_kernel_sketch_flops_per_row,0,"
+            f"structured={structured / 1e6:.1f}MF dense_kron="
+            f"{dense / 1e6:.1f}MF win={dense / structured:.0f}x "
+            f"(cin={c_in} k={k} D={d_ratio})")
 
 
 def main():
@@ -117,6 +133,7 @@ def main():
         for impl, ms in times.items():
             print(f"{a.tag},{i},{c_in},{c_out},{k},{hw},{impl},{ms:.2f}",
                   flush=True)
+    print(f"# {sketch_flops_line()}")
 
 
 if __name__ == "__main__":

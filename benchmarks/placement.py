@@ -1,0 +1,46 @@
+"""Placement-plan stats for the paper CNNs (the Fig. 12 map as metrics).
+
+One analytic pass per model: the cost-driven solver's all-ROM design
+point (every trunk in ROM-CiM + SRAM ReBranch — YOLoC's deployment) and
+a mid-budget solve, reported as ROM / SRAM-branch bits, MACs, area and
+the iso-area-SRAM energy ratio.  Wall time is the solver's own cost
+(site enumeration + greedy assignment — pure python), so these rows are
+cheap enough for every CI run; values are model outputs, not
+performance, and are never gated.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro import plan
+from repro.configs.paper_models import PAPER_MODELS
+from repro.launch.dryrun import FIG12_MODELS
+
+
+def run() -> list[str]:
+    lines = []
+    for name, reload_factor in FIG12_MODELS.items():
+        cfg = PAPER_MODELS[name]
+        t0 = time.time()
+        design = plan.solve(cfg)                    # all-ROM design point
+        stats = design.stats(cfg)
+        area = plan.plan_area_mm2(stats)
+        eff = plan.efficiency_vs_iso_sram(stats, reload_factor=reload_factor)
+        # mid-budget point: half-way to the all-SRAM area
+        mid = plan.sweep(cfg, 3, reload_factor=reload_factor)[1]
+        us = (time.time() - t0) * 1e6
+        lines.append(f"placement_rom_mbit_{name},{us:.0f},"
+                     f"{stats.rom_bits / 1e6:.2f}Mbit rom")
+        lines.append(f"placement_branch_mbit_{name},{us:.0f},"
+                     f"{stats.branch_bits / 1e6:.2f}Mbit sram branch")
+        lines.append(f"placement_design_area_{name},{us:.0f},"
+                     f"{area:.1f}mm2 eff {eff:.1f}x vs iso-area sram")
+        lines.append(f"placement_mid_budget_{name},{us:.0f},"
+                     f"{mid['sram_sites']}/{stats.sites} sites sram at "
+                     f"{mid['budget_mm2']:.0f}mm2 eff {mid['efficiency_x']}x")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -18,9 +18,10 @@ import json
 
 def _sections(fast: bool) -> list:
     from benchmarks import (table1_macro, fig12_area_map,
-                            fig14_system_energy, conv_kernel, roofline)
+                            fig14_system_energy, conv_kernel, placement,
+                            roofline)
     sections = [table1_macro, fig12_area_map, fig14_system_energy,
-                conv_kernel]
+                placement, conv_kernel]
     if not fast:
         from benchmarks import fig10_generalization, fig11_du_sweep
         sections[1:1] = [fig10_generalization, fig11_du_sweep]

@@ -6,17 +6,18 @@
 4. Show the Pallas CiM kernel agreeing with the pure-jnp oracle.
 5. Compile a whole model with `repro.deploy.compile_model`: pick a
    TrunkEngine from the registry and map ROM vs SRAM per layer.
+6. Solve the ROM/SRAM placement from the cost model (`repro.plan`):
+   the paper's Fig. 12 area map as a searchable artifact.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import deploy, engine
+from repro import deploy, engine, plan
+from repro.configs.paper_models import PAPER_MODELS
 from repro.core import cim, quant, rebranch, rom
 from repro.kernels.cim_matmul import cim_matmul_pallas
 from repro.kernels import ref
@@ -99,3 +100,27 @@ img = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 3))
 print("vgg8 logits:", model.forward(p_cnn, img).shape,
       "| conv0 in SRAM:", "rom" not in p_cnn["convs"][0],
       "| conv5 engine:", model.layer_spec("convs.5").trunk_impl)
+
+# -- 6. cost-driven placement: the Fig. 12 area map from the solver -----------
+# Instead of hand-writing which layers stay SRAM-trainable, price every
+# site with the Table-I cost model and solve under an area budget: small
+# early/late layers flip to SRAM first, the bulk mid convs stay ROM —
+# the paper's Fig. 12 shape, now produced by `plan.solve`.
+dn = PAPER_MODELS["darknet19"]
+design = plan.solve(dn)                  # all-ROM+branch design point
+stats = design.stats(dn)
+print(f"\ndarknet19 design point: {stats.rom_bits / 1e6:.0f} Mbit ROM + "
+      f"{stats.branch_bits / 1e6:.0f} Mbit SRAM branch = "
+      f"{plan.plan_area_mm2(stats):.0f} mm2, "
+      f"{plan.efficiency_vs_iso_sram(stats, reload_factor=3.0):.1f}x "
+      f"energy vs iso-area SRAM-CiM")
+budget = plan.plan_area_mm2(stats) * 2.5      # grant 2.5x the min area
+solved = plan.solve(dn, budget)
+resid = {s: "S" if not sp.enabled else "R" for s, sp in solved.entries}
+tree = plan.site_tree(dn)
+print(f"at {budget:.0f} mm2 the solver maps (R=ROM trunk, S=SRAM):")
+print("  " + " ".join(f"{s.name.split('.')[-1]}:{resid.get(s.name, 'R')}"
+                      for s in tree))
+# deploy it — bit-identical to the equivalent hand-written overrides
+model = deploy.compile_model(dn, plan=solved)
+print("deployed:", model)

@@ -40,74 +40,26 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-from typing import Any
 
 from repro import engine as engine_lib
-from repro.core import cim as cim_lib
+from repro import plan as plan_lib
 from repro.core.rebranch import ReBranchSpec
 from repro.distributed import sharding as shd
 from repro.engine.base import TrunkEngine
 from repro.models import api, cnn
 from repro.models.config import spec_for
 
-_OVERRIDE_KEYS = ("engine", "memory", "cim", "branch_enabled",
-                  "d_ratio", "u_ratio")
-
 
 def valid_sites(cfg) -> set | None:
-    """The site names ``layer_overrides`` may address for this config.
-
-    Returns the exact set a model consults through ``config.spec_for``
-    (typos and unwired sites are rejected by compile_model instead of
-    silently doing nothing).  ``None`` means unconstrained (a model
-    registered outside this module whose sites we cannot enumerate);
-    an empty set means the family has no per-site mapping wired yet
-    (ssm / hybrid — the config-wide spec still applies).
+    """The addresses ``layer_overrides`` / plan entries may use for this
+    config: the family's enumerated site tree (leaf sites plus ancestor
+    prefixes — see ``repro.plan.sites.valid_addresses``).  Typos and
+    unwired sites are rejected by compile_model instead of silently
+    doing nothing.  ``None`` means unconstrained (a model registered
+    outside this package whose sites we cannot enumerate).
     """
-    if isinstance(cfg, cnn.CNNConfig):
-        return cnn.override_sites(cfg)      # co-located with the builders
-    if cfg.family in ("dense", "vlm", "audio", "moe"):
-        sites = {"blocks"}
-        if cfg.num_codebooks:
-            sites.add("codebook_head")
-        elif not cfg.tie_embeddings:
-            sites.add("lm_head")
-        return sites
-    return set()        # ssm / hybrid: per-site mapping not wired yet
-
-
-def _normalize_override(base: ReBranchSpec, site: str, ov) -> ReBranchSpec:
-    """One layer_overrides entry -> a concrete ReBranchSpec."""
-    if isinstance(ov, ReBranchSpec):
-        return ov
-    if not isinstance(ov, dict):
-        raise TypeError(
-            f"layer_overrides[{site!r}] must be a dict or ReBranchSpec, "
-            f"got {type(ov).__name__}")
-    unknown = sorted(set(ov) - set(_OVERRIDE_KEYS))
-    if unknown:
-        raise ValueError(
-            f"layer_overrides[{site!r}]: unknown keys {unknown} "
-            f"(valid: {list(_OVERRIDE_KEYS)})")
-    rep: dict[str, Any] = {}
-    if "engine" in ov:
-        rep["trunk_impl"] = (ov["engine"].name
-                             if isinstance(ov["engine"], TrunkEngine)
-                             else ov["engine"])
-    if "memory" in ov:
-        if ov["memory"] not in ("rom", "sram"):
-            raise ValueError(
-                f"layer_overrides[{site!r}]: memory must be 'rom' or "
-                f"'sram', got {ov['memory']!r}")
-        rep["enabled"] = ov["memory"] == "rom"
-    if "cim" in ov:
-        c = ov["cim"]
-        rep["cim"] = (c if isinstance(c, cim_lib.CiMConfig)
-                      else dataclasses.replace(base.cim, mode=c))
-    for k in ("branch_enabled", "d_ratio", "u_ratio"):
-        if k in ov:
-            rep[k] = ov[k]
-    return dataclasses.replace(base, **rep)
+    tree = plan_lib.try_site_tree(cfg)
+    return None if tree is None else plan_lib.valid_addresses(tree)
 
 
 class CompiledModel:
@@ -203,18 +155,34 @@ class CompiledModel:
                 f"engine={self.engine.name!r} overrides={n_over}{mesh}>")
 
 
-def compile_model(cfg, *, engine=None, layer_overrides=None,
+def compile_model(cfg, *, engine=None, layer_overrides=None, plan=None,
                   mesh=None) -> CompiledModel:
-    """Resolve engines + per-layer ROM/SRAM mapping and bundle the model.
+    """Resolve engines + per-site ROM/SRAM placement and bundle the model.
 
     cfg: ArchConfig (any LM family) or models.cnn.CNNConfig.
     engine: registry name or TrunkEngine instance overriding the
-        config-wide ``cfg.rebranch.trunk_impl``; None keeps the config's.
-    layer_overrides: {site: override} map — see the module docstring for
-        keys and site names ('lm_head'/'codebook_head'/'blocks' for LMs;
-        'convs.N' / 'stem' / 'stages.S.B.convK' / 'head.N' for the CNNs;
-        :func:`valid_sites` enumerates them and unknown sites raise).
-        Values may also be full ReBranchSpec instances.
+        config-wide ``cfg.rebranch.trunk_impl``; None keeps the config's
+        (or the plan's, when ``plan`` is given).
+    layer_overrides: {address: override} map — see the module docstring
+        for keys; addresses are leaf sites of the family's site tree
+        ('blocks.attn' / 'blocks.ssm.in_proj' / 'lm_head' for LMs;
+        'convs.N' / 'stem' / 'stages.S.B.convK' / 'head.N' for CNNs) or
+        ancestor prefixes ('blocks', 'stages.1'); :func:`valid_sites`
+        enumerates them and unknown addresses raise.  Values may also be
+        full ReBranchSpec instances.  Thin constructor over ``plan``.
+    plan: a :class:`repro.plan.PlacementPlan` — the canonical placement
+        artifact, e.g. from the cost-driven solver::
+
+            from repro import deploy, plan
+            p = plan.solve(cfg, budget_mm2=200.0)     # Fig. 12 tradeoff
+            model = deploy.compile_model(cfg, plan=p)
+
+        The plan's default spec becomes the config-wide spec and its
+        entries the per-site mapping; deploying under a plan is
+        bit-identical to hand-writing the equivalent
+        ``rebranch_overrides`` tuple.  Mutually exclusive with
+        ``layer_overrides``; the plan must have been built for this
+        config (``plan.model == cfg.name``).
     mesh: optional jax Mesh the model is deployed onto.  Every model call
         then traces under ``sharding.use_mesh(mesh)`` — the launch/mesh
         flow already does this for LM steps, so the parameter mainly
@@ -226,7 +194,17 @@ def compile_model(cfg, *, engine=None, layer_overrides=None,
     strict registry NOW — unknown engines and unsupported fidelity modes
     fail here, not mid-trace.
     """
-    base = cfg.rebranch
+    if plan is not None:
+        if layer_overrides:
+            raise ValueError(
+                "pass either plan= or layer_overrides=, not both "
+                "(a PlacementPlan already carries the whole mapping)")
+        if plan.model != cfg.name:
+            raise ValueError(
+                f"plan was built for {plan.model!r}, not {cfg.name!r}")
+        base = plan.default
+    else:
+        base = cfg.rebranch
     if engine is not None:
         name = engine.name if isinstance(engine, TrunkEngine) else engine
         if isinstance(engine, TrunkEngine):
@@ -247,20 +225,19 @@ def compile_model(cfg, *, engine=None, layer_overrides=None,
         base = dataclasses.replace(base, trunk_impl=name)
     eng = engine_lib.resolve(base)          # strict + capability gate
 
-    sites = valid_sites(cfg)
-    if layer_overrides and sites is not None:
-        unknown = sorted(set(layer_overrides) - sites)
-        if unknown:
-            raise ValueError(
-                f"layer_overrides sites {unknown} are not wired for "
-                f"{cfg.name!r}"
-                + (f"; valid sites: {sorted(sites)}" if sites else
-                   f" (family {cfg.family!r} has no per-site overrides "
-                   f"yet — the config-wide rebranch spec still applies)"))
-
-    merged = dict(getattr(cfg, "rebranch_overrides", ()))
-    for site, ov in (layer_overrides or {}).items():
-        merged[site] = _normalize_override(base, site, ov)
+    if plan is None:
+        # layer_overrides is the thin constructor: build the plan from the
+        # dict (site-tree validation + override normalisation live there)
+        # and MERGE over any overrides the config already carries
+        plan = plan_lib.PlacementPlan.build(cfg, layer_overrides,
+                                            default=base)
+        merged = dict(getattr(cfg, "rebranch_overrides", ()))
+        merged.update(plan.as_overrides())
+    else:
+        # an explicit plan is CANONICAL: it replaces the config's mapping
+        # wholesale (a stale leaf override would out-length and shadow a
+        # plan's ancestor-prefix entry under longest-prefix resolution)
+        merged = dict(plan.as_overrides())
     for site, spec in merged.items():
         if spec.enabled:
             engine_lib.resolve(spec)        # gate per-layer engines too

@@ -18,9 +18,16 @@ unsharded 'pallas' conv — correct, just not sharded.
 
 from __future__ import annotations
 
+import warnings
+
 from repro.distributed import sharding as shd
 from repro.engine import base
 from repro.engine.registry import get, register
+
+# (H, kh, stride, padding, n_shards) combos already warned about — the
+# halo-doesn't-fit fallback is correct but silently losing the sharding a
+# deployment asked for is surprising, so it warns once per geometry.
+_warned_fallbacks: set = set()
 
 
 class ShardedPallasEngine(base.TrunkEngine):
@@ -52,9 +59,19 @@ class ShardedPallasEngine(base.TrunkEngine):
         axis = shd.mesh_axis_for(self.h_axis, mesh)
         if axis is None:
             return None, None
-        plan = halo_conv.plan_halo(x.shape[1], kh, stride, padding,
-                                   mesh.shape[axis])
+        n = mesh.shape[axis]
+        plan = halo_conv.plan_halo(x.shape[1], kh, stride, padding, n)
         if plan is None:                        # H too small for this mesh
+            key = (x.shape[1], kh, stride, padding, n)
+            if key not in _warned_fallbacks:
+                _warned_fallbacks.add(key)
+                warnings.warn(
+                    f"pallas_sharded: halo for H={x.shape[1]} kh={kh} "
+                    f"stride={stride} {padding} does not fit a "
+                    f"{n}-way '{axis}' mesh axis (it would span more "
+                    f"than one neighbour shard); falling back to the "
+                    f"unsharded 'pallas' conv for this layer",
+                    stacklevel=3)
             return None, None
         return mesh, axis
 

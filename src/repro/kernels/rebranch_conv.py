@@ -17,17 +17,21 @@ trunk_conv_pallas    : float activations in; per-(patch-row, k-block)
                        dynamic int8 quantisation happens in VMEM, the int8
                        MXU dot and the per-channel scale epilogue follow in
                        the same pass (the 'pallas' TrunkEngine path).
-rebranch_conv_pallas : the fused ReBranch conv — trunk conv AND the 1x1
-                       compress sketch  t1 = P @ blockdiag(C)  in a single
-                       pass over the patch matrix; the tiny epilogue
-                       ``out = trunk*w_scale + (t1 @ core) @ U`` is left to
-                       XLA.  Key identity: 1x1-compress -> KxK core conv
-                       composes into one KxK conv, so the trunk's patch
-                       matrix serves the branch exactly:
+rebranch_conv_pallas : the fused ReBranch conv — trunk kernel plus the
+                       per-tap compress sketch on the SAME patch matrix;
+                       the tiny epilogue ``out = trunk*w_scale +
+                       (t1 @ core) @ U`` is left to XLA.  Key identity:
+                       1x1-compress -> KxK core conv composes into one
+                       KxK conv, so the trunk's patch matrix serves the
+                       branch exactly.  The compress is STRUCTURED: the
+                       patch matrix is tap-major (R = taps*C_in), so
 
-                         branch = ((P @ kron(I_taps, C)) @ core_flat) @ U
+                         t1 = (P.reshape(M*taps, C_in) @ C).reshape(M, taps*C_c)
 
-                       One HBM read of the patch matrix instead of two.
+                       is a plain matmul on a zero-copy reshape — branch
+                       FLOPs scale with ``taps`` (an earlier version
+                       densified the block-diagonal compress as
+                       ``P @ kron(I_taps, C)``, paying ``taps^2``).
 """
 
 from __future__ import annotations
@@ -105,35 +109,44 @@ def _trunk_conv_kernel(cfg, x_ref, wq_ref, o_ref):
     o_ref[...] += cim_block_dot(cfg, x_q, wq_ref[...]) * scale
 
 
-def _fused_conv_kernel(cfg, x_ref, wq_ref, c_ref, trunk_ref, t1_ref):
-    n_idx, k_idx = pl.program_id(1), pl.program_id(2)
-
-    @pl.when(k_idx == 0)
-    def _init_trunk():
-        trunk_ref[...] = jnp.zeros_like(trunk_ref)
-
-    @pl.when((k_idx == 0) & (n_idx == 0))
-    def _init_t1():
-        t1_ref[...] = jnp.zeros_like(t1_ref)
-
-    x = x_ref[...].astype(jnp.float32)            # (bm, bk) patch slab
-    x_q, scale = _quant_rows(x)
-    trunk_ref[...] += cim_block_dot(cfg, x_q, wq_ref[...]) * scale
-
-    @pl.when(n_idx == 0)
-    def _compress():
-        t1_ref[...] += jax.lax.dot_general(
-            x, c_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )
-
-
 def _conv_blocks(m: int, r: int, c_out: int, bm: int, bn: int, bk: int,
                  rows: int):
     """Clamp block sizes to the problem and align K blocks to subarrays."""
     assert bk % rows == 0, "K blocks must hold whole subarrays"
     bk = min(bk, _round_up(r, rows))
     return min(bm, m), min(bn, c_out), bk
+
+
+def _trunk_patch_dot(p, w2d, cfg, block_m, block_n, block_k, interpret):
+    """Blocked Pallas trunk pass over the flat patch matrix.
+
+    p [M, R] float patches, w2d [R, C_out] int8 — returns the UNscaled f32
+    trunk accumulation [M, C_out] (callers apply ``w_scale``).  K blocks
+    stay subarray-aligned so the macro fidelity model sees the same row
+    grouping as the unblocked oracle.
+    """
+    m, r = p.shape
+    c_out = w2d.shape[1]
+    bm, bn, bk = _conv_blocks(m, r, c_out, block_m, block_n, block_k,
+                              cfg.rows_per_subarray)
+    pad_m, pad_n, pad_k = (-m) % bm, (-c_out) % bn, (-r) % bk
+    pp = jnp.pad(p, ((0, pad_m), (0, pad_k)))
+    wp = jnp.pad(w2d, ((0, pad_k), (0, pad_n)))
+    gm, gn, gk = pp.shape[0] // bm, wp.shape[1] // bn, pp.shape[1] // bk
+
+    out = pl.pallas_call(
+        functools.partial(_trunk_conv_kernel, cfg),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pp.shape[0], wp.shape[1]),
+                                       jnp.float32),
+        interpret=interpret,
+    )(pp, wp)
+    return out[:m, :c_out]
 
 
 def trunk_conv_pallas(
@@ -154,35 +167,35 @@ def trunk_conv_pallas(
         interpret = jax.default_backend() != "tpu"
     kh, kw, c_in, c_out = w_q.shape
     p, (n, oh, ow) = _patch_matrix(x, kh, kw, stride, padding)
-    m, r = p.shape
-    if m == 0:
+    if p.shape[0] == 0:
         return jnp.zeros((n, oh, ow, c_out), x.dtype)
-    bm, bn, bk = _conv_blocks(m, r, c_out, block_m, block_n, block_k,
-                              cfg.rows_per_subarray)
-    pad_m, pad_n, pad_k = (-m) % bm, (-c_out) % bn, (-r) % bk
-    pp = jnp.pad(p, ((0, pad_m), (0, pad_k)))
-    wp = jnp.pad(w_q.reshape(r, c_out), ((0, pad_k), (0, pad_n)))
-    gm, gn, gk = pp.shape[0] // bm, wp.shape[1] // bn, pp.shape[1] // bk
-
-    out = pl.pallas_call(
-        functools.partial(_trunk_conv_kernel, cfg),
-        grid=(gm, gn, gk),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((pp.shape[0], wp.shape[1]),
-                                       jnp.float32),
-        interpret=interpret,
-    )(pp, wp)
-    out = out[:m, :c_out] * w_scale.reshape(1, -1).astype(jnp.float32)
+    out = _trunk_patch_dot(p, w_q.reshape(-1, c_out), cfg,
+                           block_m, block_n, block_k, interpret)
+    out = out * w_scale.reshape(1, -1).astype(jnp.float32)
     return out.reshape(n, oh, ow, c_out).astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------
-# fused ReBranch conv: trunk + compress sketch in one pass over the patches
+# fused ReBranch conv: trunk + structured compress on the shared patches
 # ---------------------------------------------------------------------------
+
+def structured_compress(p: jax.Array, c2d: jax.Array, taps: int) -> jax.Array:
+    """Per-tap compress sketch of a tap-major patch matrix.
+
+    p [M, taps*C_in] -> t1 [M, taps*C_c] with  t1[m, t*C_c+j] =
+    P[m, t*C_in:(t+1)*C_in] @ C[:, j].  The patch matrix is tap-major, so
+    the per-tap dot is a plain matmul on a ZERO-COPY reshape — FLOPs are
+    M * taps * C_in * C_c, scaling with ``taps`` (the dense
+    ``P @ kron(I_taps, C)`` form costs taps^2).
+    """
+    m = p.shape[0]
+    c_in, c_c = c2d.shape
+    t1 = jax.lax.dot_general(
+        p.reshape(m * taps, c_in).astype(jnp.float32),
+        c2d.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    return t1.reshape(m, taps * c_c)
+
 
 def rebranch_conv_pallas(
     x: jax.Array,                   # [N, H, W, C_in] float
@@ -203,16 +216,18 @@ def rebranch_conv_pallas(
     """Fused ReBranch convolution forward (beyond-paper fast path).
 
     The 1x1-compress -> KxK-core branch composes into one KxK conv, so
-    both the trunk dot and the compress sketch read the SAME patch matrix:
-      trunk[m, n] += macro(quant_blk(P), w_q) * scale_blk
-      t1[m, tc]   += P @ kron(I_taps, C)
-    One Pallas pass; the O(M*(C_out + taps*C_c)) epilogue stays in XLA.
+    the trunk dot and the compress sketch share ONE im2col patch matrix:
+      trunk[m, n] += macro(quant_blk(P), w_q) * scale_blk   (Pallas grid)
+      t1          = structured_compress(P, C)               (MXU matmul)
+      out         = trunk * w_scale + (t1 @ core_flat) @ U  (tiny epilogue)
 
-    Cost note: kron(I, C) densifies the block-diagonal compress, so the
-    sketch dot's FLOPs/VMEM scale with taps^2 * C_in * C_c rather than
-    taps * C_in * C_c — immaterial next to the trunk dot for the paper's
-    D=4 ratios (taps*C_c << C_out), but a per-tap structured dot is the
-    right follow-up for very wide branches (see ROADMAP).
+    The compress is the per-tap structured dot (see
+    :func:`structured_compress`): branch sketch FLOPs scale with ``taps``,
+    not ``taps^2`` as the old ``kron(I_taps, C)`` densification did.  It
+    runs as a plain XLA matmul on a zero-copy reshape of the patch matrix
+    rather than inside the macro grid: the trunk grid re-reads each patch
+    block once per output-channel block anyway, so the one extra read is
+    noise, and XLA overlaps the small sketch dot with the trunk kernel.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -222,42 +237,12 @@ def rebranch_conv_pallas(
     taps = kh * kw
 
     p, (n, oh, ow) = _patch_matrix(x, kh, kw, stride, padding)
-    m, r = p.shape
-    if m == 0:
+    if p.shape[0] == 0:
         return jnp.zeros((n, oh, ow, c_out), x.dtype)
-    # block-diagonal compress over the taps: (R, taps*C_c)
-    cblk = jnp.kron(jnp.eye(taps, dtype=jnp.float32),
-                    c.reshape(c_in, c_c).astype(jnp.float32))
-    cdim = taps * c_c
-
-    bm, bn, bk = _conv_blocks(m, r, c_out, block_m, block_n, block_k,
-                              cfg.rows_per_subarray)
-    pad_m, pad_n, pad_k = (-m) % bm, (-c_out) % bn, (-r) % bk
-    pp = jnp.pad(p, ((0, pad_m), (0, pad_k)))
-    wp = jnp.pad(w_q.reshape(r, c_out), ((0, pad_k), (0, pad_n)))
-    cp = jnp.pad(cblk, ((0, pad_k), (0, 0)))
-    gm, gn, gk = pp.shape[0] // bm, wp.shape[1] // bn, pp.shape[1] // bk
-
-    trunk, t1 = pl.pallas_call(
-        functools.partial(_fused_conv_kernel, cfg),
-        grid=(gm, gn, gk),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((bk, cdim), lambda i, j, kk: (kk, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-            pl.BlockSpec((bm, cdim), lambda i, j, kk: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((pp.shape[0], wp.shape[1]), jnp.float32),
-            jax.ShapeDtypeStruct((pp.shape[0], cdim), jnp.float32),
-        ],
-        interpret=interpret,
-    )(pp, wp, cp)
-
-    out = trunk[:m, :c_out] * w_scale.reshape(1, -1).astype(jnp.float32)
-    branch = (t1[:m] @ core.reshape(cdim, c_u).astype(jnp.float32)
+    trunk = _trunk_patch_dot(p, w_q.reshape(-1, c_out), cfg,
+                             block_m, block_n, block_k, interpret)
+    out = trunk * w_scale.reshape(1, -1).astype(jnp.float32)
+    t1 = structured_compress(p, c.reshape(c_in, c_c), taps)
+    branch = (t1 @ core.reshape(taps * c_c, c_u).astype(jnp.float32)
               ) @ u.reshape(c_u, c_out).astype(jnp.float32)
     return (out + branch).reshape(n, oh, ow, c_out).astype(x.dtype)

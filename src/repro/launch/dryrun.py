@@ -23,6 +23,12 @@ Beyond the LM cells, ``--shape cnn_serve`` (also part of the full sweep)
 lowers the H-sharded CNN inference cells (DarkNet-19 / ResNet-18 on the
 'pallas_sharded' halo-exchange engine, see CNN_SERVE) on a small
 data-axis mesh — the halo traffic lands in the collective-permute bytes.
+
+``--shape fig12`` walks ROM/SRAM area budgets for DarkNet-19 /
+ResNet-18 / Tiny-YOLO through the cost-driven placement solver
+(``repro.plan.solve``) and emits the per-layer area map + energy ratios
+— the paper's Fig. 12 tradeoff reproduced end to end from the site
+trees.  ``--fast`` trims the budget sweep for the CI smoke step.
 """
 
 import argparse
@@ -240,6 +246,48 @@ def lower_cnn_cell(name: str, mesh):
     return rec
 
 
+# ---------------------------------------------------------------------------
+# fig12 cells: cost-driven ROM/SRAM placement sweeps (analytic, no compile)
+# ---------------------------------------------------------------------------
+
+# model -> iso-area baseline weight-reload factor (matches the Fig. 13b
+# scheduling in benchmarks.netstats: DarkNet-19 at 416px tiles spatially
+# and re-streams weights; the smaller nets reload once)
+FIG12_MODELS = {"darknet19": 3.0, "resnet18": 1.0, "tiny_yolo": 1.0}
+
+
+def run_fig12(name: str, fast: bool = False):
+    """Budget sweep for one paper CNN: records of the solved placement at
+    each area budget (area map + energy ratios), plus the per-site
+    residency map at the all-ROM design point."""
+    from repro import plan as plan_lib
+    from repro.configs.paper_models import PAPER_MODELS
+
+    cfg = PAPER_MODELS[name]
+    reload_factor = FIG12_MODELS[name]
+    records = []
+    points = 3 if fast else 9
+    for rec in plan_lib.sweep(cfg, points, reload_factor=reload_factor):
+        plan = rec.pop("plan")
+        stats = plan.stats(cfg)
+        rec.update(
+            arch=name, shape="fig12", kind="fig12",
+            rom_mbit=round(stats.rom_bits / 1e6, 2),
+            branch_mbit=round(stats.branch_bits / 1e6, 2),
+            sram_mbit=round(stats.sram_bits / 1e6, 2),
+            total_gmacs=round(stats.total_macs / 1e9, 3))
+        records.append(rec)
+    # the per-site area map at the design point (budget = all-ROM area):
+    # which layer sits on which substrate, Fig. 12's x-axis
+    design = plan_lib.solve(cfg)
+    tree = plan_lib.site_tree(cfg)
+    records[0]["area_map"] = [
+        {"site": s.name, "residency": design.residency(s.name),
+         "weights": s.total_weights, "gmacs": round(s.total_macs / 1e9, 3)}
+        for s in tree]
+    return records
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None, help="one arch (default: all)")
@@ -250,6 +298,8 @@ def main(argv=None):
                     help="only the 16x16 mesh")
     ap.add_argument("--out", default=None, help="write JSON records here")
     ap.add_argument("--no-donate", action="store_true")
+    ap.add_argument("--fast", action="store_true",
+                    help="trim analytic sweeps (fig12) for CI smoke")
     args = ap.parse_args(argv)
 
     archs = [args.arch] if args.arch else configs.ALL_ARCHS
@@ -262,7 +312,8 @@ def main(argv=None):
         meshes.append(("multi_pod", make_production_mesh(multi_pod=True)))
 
     records, failures = [], []
-    for arch in (lm_archs if args.shape != "cnn_serve" else []):
+    for arch in (lm_archs if args.shape not in ("cnn_serve", "fig12")
+                 else []):
         for shape_name, *_ in configs.cells(arch):
             if args.shape and shape_name != args.shape:
                 continue
@@ -288,6 +339,29 @@ def main(argv=None):
     # --arch darknet19; runs on its own small H-sharding mesh, not the LM
     # production meshes (the trunk is fixed ROM — spatial, not tensor,
     # parallelism is the scaling axis)
+    # fig12 cells honour --arch like cnn_serve does: an explicit arch
+    # outside FIG12_MODELS simply runs no fig12 sweeps
+    if args.shape in (None, "fig12"):
+        fig12_archs = ([args.arch] if args.arch in FIG12_MODELS
+                       else [] if args.arch else list(FIG12_MODELS))
+        for name in fig12_archs:
+            tag = f"{name} x fig12"
+            try:
+                recs = run_fig12(name, fast=args.fast)
+                records.extend(recs)
+                lo, hi = recs[0], recs[-1]
+                n_sram = ", ".join(
+                    f"{r['sram_sites']}/{r['rom_sites'] + r['sram_sites']}"
+                    for r in recs)
+                print(f"[ok] {tag}: area {lo['area_mm2']}->"
+                      f"{hi['area_mm2']}mm2, eff {lo['efficiency_x']}x->"
+                      f"{hi['efficiency_x']}x, sram sites [{n_sram}]",
+                      flush=True)
+            except Exception as e:
+                failures.append((tag, repr(e)))
+                print(f"[FAIL] {tag}: {e!r}", flush=True)
+                traceback.print_exc()
+
     if args.shape in (None, "cnn_serve"):
         cnn_mesh = make_cnn_serve_mesh(CNN_SERVE_DEVICES)
         for name in (cnn_archs if args.arch else list(CNN_SERVE)):

@@ -384,31 +384,63 @@ MODEL_REGISTRY = {
 }
 
 
-def override_sites(cfg: CNNConfig) -> set | None:
-    """Every site name this config's init/apply consult through spec_for —
-    kept NEXT TO the model builders so a structural edit (new conv, new
+def conv_site_shapes(cfg: CNNConfig) -> list | None:
+    """Every conv site this config's init/apply consult through spec_for,
+    with its geometry: ``(site, k, c_in, c_out, out_hw, stride)`` tuples
+    in forward order (out_hw is the conv's own output resolution, the MAC
+    basis: macs = out_hw^2 * k^2 * c_in * c_out per inference).
+
+    Kept NEXT TO the model builders so a structural edit (new conv, new
     projection rule) updates the enumeration in the same file.  None for
     names outside MODEL_REGISTRY.  (The 1x1 'pred' conv has no site: it
-    never freezes into ROM.)"""
+    never freezes into ROM.)  ``repro.plan.sites`` wraps these into the
+    validated site tree the placement subsystem consumes."""
     if cfg.name == "vgg8":
-        return {f"convs.{i}" for i in range(len(VGG8_CHANNELS))}
+        out, c_in, hw = [], 3, cfg.input_size
+        for i, c in enumerate(VGG8_CHANNELS):
+            out.append((f"convs.{i}", 3, c_in, c, hw, 1))
+            c_in = c
+            if i % 2 == 1:
+                hw //= 2
+        return out
     if cfg.name == "resnet18":
-        sites, c_in = {"stem"}, 64
+        hw = cfg.input_size
+        out, c_in = [("stem", 3, 3, 64, hw, 1)], 64
         for si, (c_out, blocks, stride) in enumerate(RESNET18_STAGES):
             for b in range(blocks):
                 st = stride if b == 0 else 1
-                sites |= {f"stages.{si}.{b}.conv1", f"stages.{si}.{b}.conv2"}
+                hw_out = -(-hw // st)               # SAME stride st
+                site = f"stages.{si}.{b}"
+                out.append((f"{site}.conv1", 3, c_in, c_out, hw_out, st))
+                out.append((f"{site}.conv2", 3, c_out, c_out, hw_out, 1))
                 if st != 1 or c_in != c_out:        # same rule as init
-                    sites.add(f"stages.{si}.{b}.proj")
-                c_in = c_out
-        return sites
+                    out.append((f"{site}.proj", 1, c_in, c_out, hw_out, st))
+                c_in, hw = c_out, hw_out
+        return out
     if cfg.name in ("darknet19", "tiny_yolo"):
         plan = DARKNET19 if cfg.name == "darknet19" else TINY_YOLO
-        n_head = 2 if cfg.name == "darknet19" else 1
-        return ({f"convs.{i}"
-                 for i in range(sum(1 for it in plan if it != "M"))}
-                | {f"head.{i}" for i in range(n_head)})
+        head = ([(1024, 3), (1024, 3)] if cfg.name == "darknet19"
+                else [(512, 3)])
+        out, c_in, hw, ci = [], 3, cfg.input_size, 0
+        for item in plan:
+            if item == "M":
+                hw //= 2
+                continue
+            c, k = item
+            out.append((f"convs.{ci}", k, c_in, c, hw, 1))
+            c_in = c
+            ci += 1
+        for hi, (c, k) in enumerate(head):
+            out.append((f"head.{hi}", k, c_in, c, hw, 1))
+            c_in = c
+        return out
     return None
+
+
+def override_sites(cfg: CNNConfig) -> set | None:
+    """The site-name set of :func:`conv_site_shapes` (None when unknown)."""
+    shapes = conv_site_shapes(cfg)
+    return None if shapes is None else {s[0] for s in shapes}
 
 
 def count_macs_and_params(init_fn, apply_fn, cfg: CNNConfig):

@@ -47,12 +47,14 @@ class ArchConfig:
     frontend: str = "none"         # none | vision | audio
     # --- technique ---
     rebranch: ReBranchSpec = dataclasses.field(default_factory=ReBranchSpec)
-    # Per-layer mapping overrides: ((site, ReBranchSpec), ...) resolved by
-    # spec_for().  Sites name parameter groups ('lm_head', 'codebook_head',
-    # 'blocks' for the transformer; conv sites for the CNNs) so e.g. the
-    # readout can stay SRAM-trainable while the trunk is ROM, or a single
-    # layer can run a different engine — the paper's Fig. 12 per-layer
-    # ROM/SRAM area map.  Normally built by repro.deploy.compile_model.
+    # Per-site mapping overrides: ((address, ReBranchSpec), ...) resolved
+    # by spec_for() with longest-prefix matching.  Addresses live in the
+    # family's enumerated site tree (repro.plan.sites): leaf sites like
+    # 'blocks.attn' / 'blocks.ssm.in_proj' / 'lm_head' or ancestor
+    # prefixes like 'blocks', so e.g. the readout can stay SRAM-trainable
+    # while the trunk is ROM, or one component can run another engine —
+    # the paper's Fig. 12 per-layer ROM/SRAM area map.  Normally built by
+    # repro.deploy.compile_model from a repro.plan.PlacementPlan.
     rebranch_overrides: tuple = ()
     # --- numerics ---
     dtype: Any = "bfloat16"
@@ -97,11 +99,31 @@ def spec_for(cfg, site: str) -> ReBranchSpec:
     """The ReBranchSpec governing one named parameter group (``site``).
 
     Works for any config carrying ``rebranch`` + ``rebranch_overrides``
-    (ArchConfig and models.cnn.CNNConfig).  Unoverridden sites fall back
-    to the config-wide spec; override entries are exact site matches.
+    (ArchConfig and models.cnn.CNNConfig).  Sites are dotted paths in the
+    family's site tree (see ``repro.plan.sites``); an override addresses
+    either a leaf site exactly or an ancestor prefix (``'blocks'`` governs
+    ``'blocks.attn'``, ``'blocks.mlp'``, ...).  The LONGEST matching
+    override wins; unoverridden sites fall back to the config-wide spec.
+
+    Validation happens where the enumerated site tree is known —
+    ``repro.plan.PlacementPlan`` / ``repro.deploy.compile_model`` reject
+    addresses outside the tree; this lookup stays a thin trace-time
+    resolver.
     """
-    for s, spec in getattr(cfg, "rebranch_overrides", ()):
-        if s == site:
-            return spec
-    return cfg.rebranch
+    return resolve_override(getattr(cfg, "rebranch_overrides", ()),
+                            site, cfg.rebranch)
+
+
+def resolve_override(entries, site: str, default):
+    """Longest-prefix resolution over ((address, spec), ...) entries.
+
+    THE one resolver — ``spec_for`` (trace time) and
+    ``repro.plan.PlacementPlan.spec`` (plan time) both call it, so a
+    plan can never disagree with what the model actually traces.
+    """
+    best, best_len = None, -1
+    for s, spec in entries:
+        if (s == site or site.startswith(s + ".")) and len(s) > best_len:
+            best, best_len = spec, len(s)
+    return default if best is None else best
 

@@ -16,20 +16,21 @@ import jax.numpy as jnp
 from repro.core import rebranch
 from repro.distributed.sharding import shard
 from repro.models import layers, ssm
-from repro.models.config import ArchConfig
+from repro.models.config import ArchConfig, spec_for
+from repro.models.transformer import site_cfg
 
 
 def _block_init(key, cfg: ArchConfig):
     k1, k2, k3 = jax.random.split(key, 3)
     return {
         "ln1": layers.init_rmsnorm(cfg.d_model),
-        "attn": layers.init_attention(k1, cfg),
-        "ssm": ssm.init_ssm_block(k2, cfg),
+        "attn": layers.init_attention(k1, site_cfg(cfg, "blocks.attn")),
+        "ssm": ssm.init_ssm_block(k2, cfg, prefix="blocks.ssm"),
         "attn_norm": layers.init_rmsnorm(cfg.d_model),
         "ssm_norm": layers.init_rmsnorm(cfg.d_model),
         "beta": {"sram": {"w": jnp.ones((2,), jnp.float32)}},
         "ln2": layers.init_rmsnorm(cfg.d_model),
-        "mlp": layers.init_mlp(k3, cfg),
+        "mlp": layers.init_mlp(k3, site_cfg(cfg, "blocks.mlp")),
     }
 
 
@@ -40,9 +41,11 @@ def _block_apply(params, x, cfg: ArchConfig, layer_idx: int,
     ssm_cache = cache.get("ssm") if cache else None
 
     a_out, new_attn = layers.apply_attention(
-        params["attn"], h, cfg, layer_idx, cache=attn_cache, decode=decode)
+        params["attn"], h, site_cfg(cfg, "blocks.attn"), layer_idx,
+        cache=attn_cache, decode=decode)
     s_out, new_ssm = ssm.apply_ssm_block(
-        params["ssm"], h, cfg, cache=ssm_cache, decode=decode)
+        params["ssm"], h, cfg, cache=ssm_cache, decode=decode,
+        prefix="blocks.ssm")
 
     beta = params["beta"]["sram"]["w"]
     a_out = layers.apply_rmsnorm(params["attn_norm"], a_out, cfg.norm_eps)
@@ -52,7 +55,7 @@ def _block_apply(params, x, cfg: ArchConfig, layer_idx: int,
     x = x + fused
 
     h2 = layers.apply_rmsnorm(params["ln2"], x, cfg.norm_eps)
-    x = x + layers.apply_mlp(params["mlp"], h2, cfg)
+    x = x + layers.apply_mlp(params["mlp"], h2, site_cfg(cfg, "blocks.mlp"))
     new_cache = None
     if cache is not None:
         new_cache = {"attn": new_attn, "ssm": new_ssm}
@@ -68,7 +71,8 @@ def init(key, cfg: ArchConfig):
                    for i in range(cfg.num_layers)],
         "ln_f": layers.init_rmsnorm(cfg.d_model),
         "lm_head": rebranch.init_linear(keys[-1], cfg.d_model,
-                                        cfg.vocab_size, cfg.rebranch),
+                                        cfg.vocab_size,
+                                        spec_for(cfg, "lm_head")),
     }
 
 
@@ -85,7 +89,8 @@ def features(params, batch, cfg: ArchConfig):
 
 def apply_head(params, x, cfg: ArchConfig):
     x = layers.apply_rmsnorm(params["ln_f"], x, cfg.norm_eps)
-    return rebranch.apply_linear(params["lm_head"], x, cfg.rebranch)
+    return rebranch.apply_linear(params["lm_head"], x,
+                                 spec_for(cfg, "lm_head"))
 
 
 def forward(params, batch, cfg: ArchConfig):
@@ -113,7 +118,8 @@ def prefill(params, batch, cfg: ArchConfig, cache):
         x, nc = _block_apply(block, x, cfg, i, cache=cache["layers"][i])
         new_caches.append(nc)
     x = layers.apply_rmsnorm(params["ln_f"], x[:, -1:], cfg.norm_eps)
-    logits = rebranch.apply_linear(params["lm_head"], x, cfg.rebranch)
+    logits = rebranch.apply_linear(params["lm_head"], x,
+                                   spec_for(cfg, "lm_head"))
     return logits.astype(jnp.float32), {"layers": new_caches}
 
 
@@ -125,5 +131,6 @@ def decode_step(params, tokens, cfg: ArchConfig, cache):
                              decode=True)
         new_caches.append(nc)
     x = layers.apply_rmsnorm(params["ln_f"], x, cfg.norm_eps)
-    logits = rebranch.apply_linear(params["lm_head"], x, cfg.rebranch)
+    logits = rebranch.apply_linear(params["lm_head"], x,
+                                   spec_for(cfg, "lm_head"))
     return logits.astype(jnp.float32), {"layers": new_caches}

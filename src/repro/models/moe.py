@@ -32,6 +32,8 @@ from repro.models.config import ArchConfig
 def init_expert_linear(key, n_exp: int, d_in: int, d_out: int, spec):
     kw, kc, ku = jax.random.split(key, 3)
     w = jax.random.normal(kw, (n_exp, d_in, d_out), jnp.float32) / np.sqrt(d_in)
+    if not spec.enabled:            # SRAM residency: plain trainable stack
+        return {"sram": {"w": w}}
     absmax = jnp.max(jnp.abs(w), axis=1, keepdims=True)        # [E,1,out]
     w_scale = jnp.maximum(absmax, 1e-8) / 127.0
     w_q = jnp.clip(jnp.round(w / w_scale), -127, 127).astype(jnp.int8)
@@ -76,7 +78,11 @@ _stacked_trunk_matmul.defvjp(_stm_fwd, _stm_bwd)
 
 def apply_expert_linear(params, x):
     """x: [E, C, d_in] -> [E, C, d_out] (reassociated branch epilogue —
-    see core.rebranch.apply_linear)."""
+    see core.rebranch.apply_linear).  SRAM-resident stacks (no ROM image;
+    'blocks.moe' mapped to SRAM) are a plain batched matmul."""
+    if "rom" not in params:
+        return jnp.einsum("ecd,edf->ecf", x,
+                          params["sram"]["w"].astype(x.dtype))
     rom, sram = params["rom"], params["sram"]
     y = _stacked_trunk_matmul(x, rom["w_q"], rom["w_scale"])
     t1 = x @ rom["C"].astype(x.dtype)                           # [E,C,dc]

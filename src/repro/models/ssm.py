@@ -23,26 +23,33 @@ import numpy as np
 from repro.core import rebranch
 from repro.distributed.sharding import shard
 from repro.models import layers
-from repro.models.config import ArchConfig
+from repro.models.config import ArchConfig, spec_for
 
 
-def init_ssm_block(key, cfg: ArchConfig):
+def init_ssm_block(key, cfg: ArchConfig, prefix: str = "blocks"):
+    """prefix: the site-tree path of this block's projection sites
+    (``'blocks'`` for the mamba backbone, ``'blocks.ssm'`` inside the
+    hybrid) — each large projection is its own overridable site."""
     ks = jax.random.split(key, 6)
-    spec = cfg.rebranch
     d, di, n, dtr = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank
     # S4D-real initialisation for A
     a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None], (di, 1))
     p = {
-        "in_proj": rebranch.init_linear(ks[0], d, 2 * di, spec),
+        "in_proj": rebranch.init_linear(
+            ks[0], d, 2 * di, spec_for(cfg, f"{prefix}.in_proj")),
         "conv": {"sram": {
             "w": jax.random.normal(ks[1], (cfg.d_conv, di), jnp.float32)
                  / np.sqrt(cfg.d_conv),
             "b": jnp.zeros((di,), jnp.float32)}},
-        "x_proj": rebranch.init_linear(ks[2], di, dtr + 2 * n, spec),
-        "dt_proj": rebranch.init_linear(ks[3], dtr, di, spec, use_bias=True),
+        "x_proj": rebranch.init_linear(
+            ks[2], di, dtr + 2 * n, spec_for(cfg, f"{prefix}.x_proj")),
+        "dt_proj": rebranch.init_linear(
+            ks[3], dtr, di, spec_for(cfg, f"{prefix}.dt_proj"),
+            use_bias=True),
         "A_log": {"sram": {"w": jnp.log(a)}},
         "D": {"sram": {"w": jnp.ones((di,), jnp.float32)}},
-        "out_proj": rebranch.init_linear(ks[4], di, d, spec),
+        "out_proj": rebranch.init_linear(
+            ks[4], di, d, spec_for(cfg, f"{prefix}.out_proj")),
     }
     # dt bias init so softplus(dt) starts in [1e-3, 1e-1]
     dt_init = jnp.exp(jax.random.uniform(ks[5], (di,)) *
@@ -103,27 +110,31 @@ def _ssm_scan_chunked(u, dt, a, b, c, d_skip, chunk: int, h0=None):
     return y + u[:, :s] * d_skip[None, None], h_last
 
 
-def _compute_ssm_inputs(params, x_conv, cfg: ArchConfig):
-    spec = cfg.rebranch
+def _compute_ssm_inputs(params, x_conv, cfg: ArchConfig,
+                        prefix: str = "blocks"):
     di, n, dtr = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
-    xdbc = rebranch.apply_linear(params["x_proj"], x_conv, spec)
+    xdbc = rebranch.apply_linear(params["x_proj"], x_conv,
+                                 spec_for(cfg, f"{prefix}.x_proj"))
     dt_r, b, c = jnp.split(xdbc, [dtr, dtr + n], axis=-1)
     if cfg.ssm_norm:                       # falcon-mamba
         dt_r = layers.apply_rmsnorm(params["dt_norm"], dt_r, cfg.norm_eps)
         b = layers.apply_rmsnorm(params["b_norm"], b, cfg.norm_eps)
         c = layers.apply_rmsnorm(params["c_norm"], c, cfg.norm_eps)
     dt = jax.nn.softplus(
-        rebranch.apply_linear(params["dt_proj"], dt_r, spec).astype(jnp.float32))
+        rebranch.apply_linear(
+            params["dt_proj"], dt_r,
+            spec_for(cfg, f"{prefix}.dt_proj")).astype(jnp.float32))
     a = -jnp.exp(params["A_log"]["sram"]["w"])
     return dt, a, b.astype(jnp.float32), c.astype(jnp.float32)
 
 
-def apply_ssm_block(params, x, cfg: ArchConfig, cache=None, decode=False):
+def apply_ssm_block(params, x, cfg: ArchConfig, cache=None, decode=False,
+                    prefix: str = "blocks"):
     """Returns (out, new_cache).  cache = {conv [B,K-1,di], h [B,di,N]}."""
-    spec = cfg.rebranch
     bsz, s, _ = x.shape
     di = cfg.d_inner
-    xz = rebranch.apply_linear(params["in_proj"], x, spec)
+    xz = rebranch.apply_linear(params["in_proj"], x,
+                               spec_for(cfg, f"{prefix}.in_proj"))
     xi, z = jnp.split(xz, 2, axis=-1)
     xi = shard(xi, "batch", "seq", "ssm_inner")
 
@@ -137,7 +148,7 @@ def apply_ssm_block(params, x, cfg: ArchConfig, cache=None, decode=False):
         x_conv = jnp.einsum("bkd,kd->bd", hist.astype(jnp.float32),
                             conv_w)[:, None] + conv_b
         x_conv = jax.nn.silu(x_conv).astype(x.dtype)
-        dt, a, b, c = _compute_ssm_inputs(params, x_conv, cfg)
+        dt, a, b, c = _compute_ssm_inputs(params, x_conv, cfg, prefix)
         h = cache["h"].astype(jnp.float32)
         da = jnp.exp(dt[:, 0, :, None] * a[None])             # [B,di,N]
         dbu = (dt[:, 0] * x_conv.astype(jnp.float32)[:, 0])[..., None] \
@@ -156,7 +167,7 @@ def apply_ssm_block(params, x, cfg: ArchConfig, cache=None, decode=False):
             xpad[:, i:i + s].astype(jnp.float32) * conv_w[i]
             for i in range(k)) + conv_b
         x_conv = jax.nn.silu(x_conv).astype(x.dtype)
-        dt, a, b, c = _compute_ssm_inputs(params, x_conv, cfg)
+        dt, a, b, c = _compute_ssm_inputs(params, x_conv, cfg, prefix)
         h0 = cache["h"] if (cache is not None and "h" in cache) else None
         y, h_last = _ssm_scan_chunked(
             x_conv.astype(jnp.float32), dt, a, b, c,
@@ -167,7 +178,8 @@ def apply_ssm_block(params, x, cfg: ArchConfig, cache=None, decode=False):
                          xpad[:, :0], "h": h_last}
 
     y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
-    y = rebranch.apply_linear(params["out_proj"], y, spec,
+    y = rebranch.apply_linear(params["out_proj"], y,
+                              spec_for(cfg, f"{prefix}.out_proj"),
                               t1_axes=("batch", "seq", "mlp"),
                               out_axes=("batch", "seq_sp", None))
     return shard(y, "batch", "seq_sp", None), new_cache
@@ -205,7 +217,8 @@ def init(key, cfg: ArchConfig):
         "layers": blocks,
         "ln_f": layers.init_rmsnorm(cfg.d_model),
         "lm_head": rebranch.init_linear(keys[-1], cfg.d_model,
-                                        cfg.vocab_size, cfg.rebranch),
+                                        cfg.vocab_size,
+                                        spec_for(cfg, "lm_head")),
     }
 
 
@@ -234,7 +247,8 @@ def features(params, batch, cfg: ArchConfig):
 
 def apply_head(params, x, cfg: ArchConfig):
     x = layers.apply_rmsnorm(params["ln_f"], x, cfg.norm_eps)
-    return rebranch.apply_linear(params["lm_head"], x, cfg.rebranch)
+    return rebranch.apply_linear(params["lm_head"], x,
+                                 spec_for(cfg, "lm_head"))
 
 
 def forward(params, batch, cfg: ArchConfig):
@@ -274,7 +288,8 @@ def prefill(params, batch, cfg: ArchConfig, cache):
             x, nc = fn(block, x, lc)
             new_caches.append(nc)
     x = layers.apply_rmsnorm(params["ln_f"], x[:, -1:], cfg.norm_eps)
-    logits = rebranch.apply_linear(params["lm_head"], x, cfg.rebranch)
+    logits = rebranch.apply_linear(params["lm_head"], x,
+                                   spec_for(cfg, "lm_head"))
     return logits.astype(jnp.float32), {"layers": new_caches}
 
 
@@ -298,5 +313,6 @@ def decode_step(params, tokens, cfg: ArchConfig, cache):
             x, nc = fn(block, x, lc)
             new_caches.append(nc)
     x = layers.apply_rmsnorm(params["ln_f"], x, cfg.norm_eps)
-    logits = rebranch.apply_linear(params["lm_head"], x, cfg.rebranch)
+    logits = rebranch.apply_linear(params["lm_head"], x,
+                                   spec_for(cfg, "lm_head"))
     return logits.astype(jnp.float32), {"layers": new_caches}

@@ -25,12 +25,17 @@ from repro.models import layers
 from repro.models.config import ArchConfig, spec_for
 
 
-def _blocks_cfg(cfg: ArchConfig) -> ArchConfig:
-    """cfg with the 'blocks' site override applied to cfg.rebranch — the
-    per-layer mapping hook for everything inside the transformer blocks
-    (attention + MLP/MoE trunks).  scan-over-layers keeps blocks uniform,
-    so 'blocks' is one site; the heads get their own sites below."""
-    spec = spec_for(cfg, "blocks")
+def site_cfg(cfg: ArchConfig, site: str) -> ArchConfig:
+    """cfg with the resolved spec for ``site`` as its config-wide rebranch.
+
+    The per-site mapping hook for components whose internals consult
+    ``cfg.rebranch`` directly (attention, MLP, MoE, SSM blocks): the
+    caller resolves the component's site through ``spec_for`` — which
+    honours ancestor-prefix overrides, so a ``'blocks'`` override still
+    governs every ``blocks.*`` sub-site — and hands the component a cfg
+    carrying that spec.  scan-over-layers keeps blocks uniform across
+    depth, so block sub-sites name components, not layer indices."""
+    spec = spec_for(cfg, site)
     if spec is cfg.rebranch:
         return cfg
     return dataclasses.replace(cfg, rebranch=spec)
@@ -40,14 +45,14 @@ def _block_init(key, cfg: ArchConfig):
     k1, k2 = jax.random.split(key)
     block = {
         "ln1": layers.init_rmsnorm(cfg.d_model),
-        "attn": layers.init_attention(k1, cfg),
+        "attn": layers.init_attention(k1, site_cfg(cfg, "blocks.attn")),
         "ln2": layers.init_rmsnorm(cfg.d_model),
     }
     if cfg.family == "moe":
         from repro.models import moe
-        block["moe"] = moe.init_moe_block(k2, cfg)
+        block["moe"] = moe.init_moe_block(k2, site_cfg(cfg, "blocks.moe"))
     else:
-        block["mlp"] = layers.init_mlp(k2, cfg)
+        block["mlp"] = layers.init_mlp(k2, site_cfg(cfg, "blocks.mlp"))
     return block
 
 
@@ -55,27 +60,28 @@ def _block_apply(params, x, cfg: ArchConfig, layer_idx: int,
                  positions=None, cache=None, decode=False):
     h, new_cache = layers.apply_attention(
         params["attn"], layers.apply_rmsnorm(params["ln1"], x, cfg.norm_eps),
-        cfg, layer_idx, positions=positions, cache=cache, decode=decode)
+        site_cfg(cfg, "blocks.attn"), layer_idx,
+        positions=positions, cache=cache, decode=decode)
     x = x + h
     h2 = layers.apply_rmsnorm(params["ln2"], x, cfg.norm_eps)
     if cfg.family == "moe":
         from repro.models import moe
-        h2 = moe.apply_moe_block(params["moe"], h2, cfg)
+        h2 = moe.apply_moe_block(params["moe"], h2,
+                                 site_cfg(cfg, "blocks.moe"))
     else:
-        h2 = layers.apply_mlp(params["mlp"], h2, cfg)
+        h2 = layers.apply_mlp(params["mlp"], h2, site_cfg(cfg, "blocks.mlp"))
     return x + h2, new_cache
 
 
 def init(key, cfg: ArchConfig):
     keys = jax.random.split(key, cfg.num_layers + 3)
-    bcfg = _blocks_cfg(cfg)
     if cfg.scan_layers:
         # stacked per-layer params (leading L dim) -> lax.scan over layers:
         # compile time is O(1) in depth (deepseek-67b: 95 layers)
-        blocks = jax.vmap(lambda k: _block_init(k, bcfg))(
+        blocks = jax.vmap(lambda k: _block_init(k, cfg))(
             jnp.stack(keys[1:cfg.num_layers + 1]))
     else:
-        blocks = [_block_init(keys[i + 1], bcfg)
+        blocks = [_block_init(keys[i + 1], cfg)
                   for i in range(cfg.num_layers)]
     params = {
         "embed": layers.init_embedding(keys[0], cfg.vocab_size,
@@ -141,17 +147,16 @@ def features(params, batch, cfg: ArchConfig):
     x = _embed_inputs(params, batch, cfg)
     x = shard(x, "batch", "seq_sp", "embed")
     positions = batch.get("positions")
-    bcfg = _blocks_cfg(cfg)
     if cfg.scan_layers:
         def body(xx, block):
-            out = _block_apply(block, xx, bcfg, 0, positions=positions)[0]
+            out = _block_apply(block, xx, cfg, 0, positions=positions)[0]
             return shard(out, "batch", "seq_sp", "embed"), None
         if cfg.remat:
             body = jax.checkpoint(body)
         x, _ = jax.lax.scan(body, x, params["layers"])
         return x
     for i, block in enumerate(params["layers"]):
-        fn = lambda p, xx, pos, _i=i: _block_apply(p, xx, bcfg, _i,
+        fn = lambda p, xx, pos, _i=i: _block_apply(p, xx, cfg, _i,
                                                    positions=pos)[0]
         if cfg.remat:
             fn = jax.checkpoint(fn)
@@ -182,11 +187,10 @@ def prefill(params, batch, cfg: ArchConfig, cache):
     x = _embed_inputs(params, batch, cfg)
     x = shard(x, "batch", "seq_sp", "embed")
     positions = batch.get("positions")
-    bcfg = _blocks_cfg(cfg)
     if cfg.scan_layers:
         def body(xx, inp):
             block, lc = inp
-            out, nc = _block_apply(block, xx, bcfg, 0, positions=positions,
+            out, nc = _block_apply(block, xx, cfg, 0, positions=positions,
                                    cache=lc)
             return shard(out, "batch", "seq_sp", "embed"), nc
         x, new_caches = jax.lax.scan(body, x,
@@ -195,7 +199,7 @@ def prefill(params, batch, cfg: ArchConfig, cache):
         return logits, {"layers": new_caches}
     new_layer_caches = []
     for i, block in enumerate(params["layers"]):
-        x, lc = _block_apply(block, x, bcfg, i, positions=positions,
+        x, lc = _block_apply(block, x, cfg, i, positions=positions,
                              cache=cache["layers"][i])
         new_layer_caches.append(lc)
     logits = _readout(params, x[:, -1:, :], cfg)
@@ -207,18 +211,17 @@ def decode_step(params, tokens, cfg: ArchConfig, cache):
     [B,1,Q] multi-codebook)."""
     x = _token_embed(params, tokens, cfg)
     x = shard(x, "batch", None, "embed")
-    bcfg = _blocks_cfg(cfg)
     if cfg.scan_layers:
         def body(xx, inp):
             block, lc = inp
-            out, nc = _block_apply(block, xx, bcfg, 0, cache=lc, decode=True)
+            out, nc = _block_apply(block, xx, cfg, 0, cache=lc, decode=True)
             return out, nc
         x, new_caches = jax.lax.scan(body, x,
                                      (params["layers"], cache["layers"]))
         return _readout(params, x, cfg), {"layers": new_caches}
     new_layer_caches = []
     for i, block in enumerate(params["layers"]):
-        x, lc = _block_apply(block, x, bcfg, i,
+        x, lc = _block_apply(block, x, cfg, i,
                              cache=cache["layers"][i], decode=True)
         new_layer_caches.append(lc)
     logits = _readout(params, x, cfg)

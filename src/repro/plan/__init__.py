@@ -1,0 +1,25 @@
+"""ROM/SRAM placement subsystem (paper §4, Fig. 12).
+
+The paper's central deployment question — which weights live in dense
+ROM-CiM and which stay SRAM-trainable (with or without a ReBranch) —
+becomes a first-class, searchable artifact here instead of hand-written
+override tuples:
+
+  * :mod:`repro.plan.sites`     — every model family exports an
+    enumerable, validated site tree (named parameter groups with shapes,
+    weight and MAC counts).
+  * :mod:`repro.plan.placement` — :class:`PlacementPlan`, the frozen
+    site -> (engine, ReBranchSpec, ROM/SRAM residency) mapping that
+    ``repro.deploy.compile_model(cfg, plan=...)`` consumes, with
+    aggregate ROM/SRAM-bit and MAC stats.
+  * :mod:`repro.plan.solve`     — the cost-driven planner: greedy
+    ROM-vs-SRAM residency per site under an area budget using
+    ``core.energy.CostModel``, reproducing the Fig. 12 tradeoff curve.
+"""
+
+from repro.plan.placement import (PlacementPlan, PlanStats,  # noqa: F401
+                                  normalize_override)
+from repro.plan.sites import (Site, site_tree, try_site_tree,  # noqa: F401
+                              valid_addresses)
+from repro.plan.solve import (plan_area_mm2, plan_energy_mj,  # noqa: F401
+                              efficiency_vs_iso_sram, solve, sweep)

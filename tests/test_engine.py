@@ -281,23 +281,27 @@ class TestLayerOverrides:
             deploy.compile_model(_lm_cfg(),
                                  layer_overrides={"pred": {"memory": "sram"}})
 
-    def test_ssm_family_overrides_not_wired(self):
+    def test_ssm_family_sites_wired(self):
+        """PR 5: ssm/hybrid families now expose per-site overrides."""
         cfg = ArchConfig(name="s_test", family="ssm", num_layers=1,
                          d_model=16, ssm_state=4, vocab_size=32)
-        assert deploy.valid_sites(cfg) == set()
-        with pytest.raises(ValueError, match="no per-site overrides"):
-            deploy.compile_model(cfg,
-                                 layer_overrides={"lm_head":
-                                                  {"memory": "sram"}})
+        assert {"blocks", "blocks.in_proj", "blocks.out_proj",
+                "lm_head"} <= deploy.valid_sites(cfg)
+        model = deploy.compile_model(
+            cfg, layer_overrides={"lm_head": {"memory": "sram"}})
+        p = model.init(jax.random.PRNGKey(0))
+        assert "rom" not in p["lm_head"]
         deploy.compile_model(cfg)           # no overrides: fine
 
     def test_valid_sites_enumeration(self):
         assert deploy.valid_sites(_cnn_cfg()) == {
-            f"convs.{i}" for i in range(6)}
+            f"convs.{i}" for i in range(6)} | {"convs"}
         rs = deploy.valid_sites(cnn.CNNConfig(name="resnet18"))
         assert "stem" in rs and "stages.1.0.proj" in rs
+        assert "stages.1" in rs                 # ancestor prefixes valid
         assert "stages.0.0.proj" not in rs      # stage 0 has no projection
-        assert deploy.valid_sites(_lm_cfg()) == {"blocks", "lm_head"}
+        assert deploy.valid_sites(_lm_cfg()) == {
+            "blocks", "blocks.attn", "blocks.mlp", "lm_head"}
 
     def test_engine_instance_conflict_raises(self):
         """Passing an instance whose name is taken by a DIFFERENT engine

@@ -102,6 +102,66 @@ class TestFallback:
         want = engine.get("pallas").conv(cfg, x, w_q, w_scale)
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
+    def test_no_mesh_fallback_is_silent(self):
+        """Running without a mesh is normal single-device operation, not a
+        surprise — no warning."""
+        import warnings
+
+        import jax
+        from repro import engine
+        from repro.core import cim as cim_lib
+        from repro.core import rebranch
+        from repro.models import cnn
+
+        p = cnn.init_conv(jax.random.PRNGKey(0), 3, 8, 8,
+                          rebranch.ReBranchSpec())
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 8, 8))
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            engine.get("pallas_sharded").conv(
+                cim_lib.CiMConfig(mode="ideal"), x,
+                p["rom"]["w_q"], p["rom"]["w_scale"])
+
+
+def test_halo_doesnt_fit_fallback_warns_once():
+    """When a mesh IS bound but the halo would span more than one
+    neighbour shard, the engine must say so (once per geometry) instead
+    of silently dropping the sharding the deployment asked for."""
+    out = _run(textwrap.dedent("""
+        import warnings
+        import jax, jax.numpy as jnp
+        from repro import engine as engine_lib
+        from repro.core import cim as cim_lib
+        from repro.core import rebranch
+        from repro.distributed import sharding as shd
+        from repro.models import cnn
+
+        cfg = cim_lib.CiMConfig(mode="ideal")
+        p = cnn.init_conv(jax.random.PRNGKey(0), 5, 8, 8,
+                          rebranch.ReBranchSpec())
+        # H=8 over 8 shards -> 1 row/shard < the 5x5 kernel's 2-row halo:
+        # infeasible, the engine must fall back unsharded (and say so)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 8, 8))
+        mesh = jax.make_mesh((8, 1), ("data", "model"))
+        eng = engine_lib.get("pallas_sharded")
+        with shd.use_mesh(mesh), mesh:
+            with warnings.catch_warnings(record=True) as w1:
+                warnings.simplefilter("always")
+                y = eng.conv(cfg, x, p["rom"]["w_q"], p["rom"]["w_scale"])
+            with warnings.catch_warnings(record=True) as w2:
+                warnings.simplefilter("always")
+                y = eng.conv(cfg, x, p["rom"]["w_q"], p["rom"]["w_scale"])
+        hits1 = [m for m in w1 if "falling back" in str(m.message)]
+        hits2 = [m for m in w2 if "falling back" in str(m.message)]
+        print("WARNED_FIRST", len(hits1))
+        print("WARNED_AGAIN", len(hits2))
+        print("MSG_OK", "halo for H=8 kh=5" in str(hits1[0].message)
+              if hits1 else False)
+    """))
+    assert "WARNED_FIRST 1" in out, out
+    assert "WARNED_AGAIN 0" in out, out          # one-time per geometry
+    assert "MSG_OK True" in out, out
+
 
 # ---------------------------------------------------------------------------
 # multi-device bit-parity (subprocess, forced host devices)
