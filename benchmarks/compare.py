@@ -3,8 +3,13 @@
 Compares a ``benchmarks.run --json`` output against the newest
 ``BENCH_*.json`` at the repo root and fails (exit 1) when any
 kernel-parity metric — the ``conv_kernel`` section, where the fused
-Pallas kernels race the XLA baseline on identical layers — regresses by
-more than ``--max-ratio`` (default 2x) in wall time.
+Pallas kernels race the XLA baseline on identical layers, and the
+``tuned_kernel`` section, where the tuning-table dispatch races the
+untuned defaults — regresses by more than ``--max-ratio`` (default 2x)
+in wall time.  ``--ratchet R`` additionally prints informational
+RATCHET lines for gated metrics now more than R times FASTER than the
+baseline: a stale baseline's slack hides future regressions, and the
+fix is to check in a fresh ``BENCH_<n+1>.json``.
 
 Only metrics present in BOTH files are compared (a --fast run gates
 against the overlapping subset of a full-run baseline), and metrics
@@ -27,7 +32,7 @@ import sys
 
 # sections whose wall_us measures kernel execution (gate-worthy); the
 # rest are analytic tables where wall time is incidental
-GATED_SECTIONS = ("conv_kernel",)
+GATED_SECTIONS = ("conv_kernel", "tuned_kernel")
 
 
 def latest_baseline(root: str) -> str | None:
@@ -64,6 +69,32 @@ def compare(current: dict, baseline: dict, *, max_ratio: float,
     return problems
 
 
+def ratchet(current: dict, baseline: dict, *, min_ratio: float,
+            min_us: float) -> list[str]:
+    """Gated metrics now >``min_ratio`` FASTER than the baseline.
+
+    The inverse of :func:`compare`: after a kernel optimisation lands,
+    the old baseline's slack hides future regressions (a 2x gate against
+    a number that is now 2x stale tolerates a 4x slowdown).  These are
+    informational — the fix is to check in a fresh ``BENCH_<n+1>.json``,
+    which re-tightens the gate, so the exit code stays 0.
+    """
+    wins = []
+    for key, base in baseline.items():
+        if key[0] not in GATED_SECTIONS or base["wall_us"] < min_us:
+            continue
+        cur = current.get(key)
+        if cur is None or cur["wall_us"] <= 0:
+            continue
+        ratio = base["wall_us"] / cur["wall_us"]
+        if ratio > min_ratio:
+            wins.append(
+                f"{key[0]}/{key[1]}: {cur['wall_us']:.0f}us vs baseline "
+                f"{base['wall_us']:.0f}us ({ratio:.2f}x faster — baseline "
+                f"is stale)")
+    return wins
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("current", help="benchmarks.run --json output to check")
@@ -72,6 +103,10 @@ def main(argv=None) -> int:
     ap.add_argument("--max-ratio", type=float, default=2.0)
     ap.add_argument("--min-us", type=float, default=100.0,
                     help="skip baseline metrics below this (timer noise)")
+    ap.add_argument("--ratchet", type=float, default=None, metavar="RATIO",
+                    help="also flag gated metrics more than RATIO times "
+                         "FASTER than the baseline (stale baseline — check "
+                         "in a fresh BENCH_*.json); informational, exit 0")
     args = ap.parse_args(argv)
 
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -91,6 +126,10 @@ def main(argv=None) -> int:
           f"{os.path.basename(baseline_path)}")
     for p in problems:
         print(f"REGRESSION: {p}")
+    if args.ratchet is not None:
+        for w in ratchet(current, baseline, min_ratio=args.ratchet,
+                         min_us=args.min_us):
+            print(f"RATCHET: {w}")
     if problems:
         return 1
     print("benchmark gate: OK")

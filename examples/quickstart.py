@@ -8,6 +8,9 @@
    TrunkEngine from the registry and map ROM vs SRAM per layer.
 6. Solve the ROM/SRAM placement from the cost model (`repro.plan`):
    the paper's Fig. 12 area map as a searchable artifact.
+7. Kernel autotuning (`repro.tune`): the checked-in tuning table the
+   kernels consult per GEMM geometry, and why only bit-identical
+   tilings are legal entries.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -124,3 +127,32 @@ print("  " + " ".join(f"{s.name.split('.')[-1]}:{resid.get(s.name, 'R')}"
 # deploy it — bit-identical to the equivalent hand-written overrides
 model = deploy.compile_model(dn, plan=solved)
 print("deployed:", model)
+
+# -- 7. kernel autotuning: the tuning table behind the Pallas kernels ---------
+# Every Pallas kernel call with unspecified block sizes consults the
+# checked-in per-geometry table (regenerate: python -m repro.tune).  A
+# table entry may change how FAST a kernel runs, never WHAT it returns:
+# the k-partition fixes the per-block activation quant scales, so only
+# block_k values reproducing the default partition are legal — block_m /
+# block_n / grid dim order / grid-vs-direct impl are the free axes.
+from repro.kernels.rebranch_conv import trunk_conv_pallas
+from repro.tune import autotune, table
+
+m, kdim, n = 16 * 16, 3 * 3 * 32, 64          # a DarkNet-19 conv site's
+print("\npatch GEMM", (m, kdim, n),           # implied patch GEMM
+      "-> table:", table.lookup("trunk_conv", "ideal", "float32",
+                                m, kdim, n))
+print("legal block_k at k=576:", autotune.legal_block_ks(576),
+      "(128/256 would re-partition the contraction = different bits)")
+
+xc = jax.random.normal(jax.random.PRNGKey(3), (1, 16, 16, 32))
+wc = jax.random.randint(jax.random.PRNGKey(4), (3, 3, 32, 64),
+                        -127, 128, jnp.int8)
+ws = jnp.full((64,), 0.01, jnp.float32)
+tuned = trunk_conv_pallas(xc, wc, ws)         # table-resolved tiling
+with table.disabled():                        # force kernel defaults
+    untuned = trunk_conv_pallas(xc, wc, ws)
+print("tuned output bit-identical to untuned:",
+      bool(np.array_equal(np.asarray(tuned), np.asarray(untuned))),
+      "| deploy.compile_model(..., tune=True) asserts the engine "
+      "has tuned kernels")

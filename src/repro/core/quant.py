@@ -45,6 +45,42 @@ def quantize_activations(x: jax.Array) -> tuple[jax.Array, jax.Array]:
     return x_q, scale
 
 
+def quant_rows(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Reciprocal-form variant of :func:`quantize_activations`.
+
+    Same quantisation scheme as ``quantize_activations`` but with every
+    division replaced by a reciprocal multiply: the rounded integers
+    stay in range because ``|x| * (1/scale) <= 127 * (1 + O(eps))``
+    never reaches the .5 rounding boundary at 127.5.  Two reasons for
+    the reciprocal form: XLA:CPU emits a vectorised multiply where the
+    division form stalls (this is what makes the fused kernels
+    competitive), and — crucially for the sharded bit-parity contracts
+    — jitted XLA rewrites division *by a constant* into a reciprocal
+    multiply anyway (1 ulp off the true quotient), so writing the
+    multiply out explicitly is the only way eager and jitted callers
+    agree bit-for-bit.
+    """
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-8) * (1.0 / INT8_MAX)
+    x_q = jnp.clip(jnp.round(x * (1.0 / scale)),
+                   -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return x_q, scale
+
+
+def quant_rows_f32(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Like :func:`quant_rows` but keeps the quantized values in f32.
+
+    The clip is unnecessary: the per-row absmax bounds
+    ``|x| * (1/scale)`` by ``127 * (1 + O(eps)) < 127.01`` which rounds
+    to at most 127, so the rounded product already lies in
+    ``[-127, 127]``.  Skipping the int8 round-trip keeps the values in
+    the f32 GEMM sweet spot on CPU.
+    """
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-8) * (1.0 / INT8_MAX)
+    return jnp.round(x * (1.0 / scale)), scale
+
+
 def fake_quant_ste(x: jax.Array) -> jax.Array:
     """Fake-quantize activations with a straight-through gradient."""
     x_q, scale = quantize_activations(x)

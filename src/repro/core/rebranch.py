@@ -284,6 +284,15 @@ def apply_linear(params, x, spec: ReBranchSpec, t1_axes=None,
     rom, sram = params["rom"], params["sram"]
     from repro import engine as engine_lib   # deferred: avoids import cycle
     eng = engine_lib.resolve(spec)           # strict + capability-gated
+    if (spec.branch_enabled and "core" in sram
+            and "matmul" in eng.capabilities.fused_ops):
+        # fused trunk+branch pass: one read of x computes the CiM dot and
+        # the compress sketch (t1_axes/out_axes hints don't apply — the
+        # fused kernel owns its own layout)
+        y = eng.fused_matmul(spec.cim, x, rom["w_q"], rom["w_scale"],
+                             rom["C"], sram["core"], rom["U"])
+        b = sram.get("b")
+        return y if b is None else y + b.astype(x.dtype)
     y = eng.matmul(spec.cim, x, rom["w_q"], rom["w_scale"],
                    out_axes=out_axes)
 

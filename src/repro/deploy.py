@@ -71,25 +71,31 @@ class CompiledModel:
     (cnn.CNNConfig) expose init/forward (there is no KV cache to manage).
     """
 
-    def __init__(self, cfg, engine: TrunkEngine, mesh=None):
+    def __init__(self, cfg, engine: TrunkEngine, mesh=None, tune=None):
         self.cfg = cfg
         self.engine = engine
         self.mesh = mesh
+        self.tune = tune
         self._is_cnn = isinstance(cfg, cnn.CNNConfig)
         if self._is_cnn:
             self._cnn_init, self._cnn_apply = cnn.MODEL_REGISTRY[cfg.name]
 
     @contextlib.contextmanager
     def _scope(self):
-        """Activate the bound mesh (+ sharding rules) around every model
-        call, so compile-time mesh binding works from plain jit sites —
-        jax.jit(model.forward) traces under the mesh without the caller
-        managing ``use_mesh``.  No-op when unbound (mesh=None)."""
-        if self.mesh is None:
+        """Activate the bound mesh (+ sharding rules) and the tuning-table
+        policy around every model call, so compile-time binding works from
+        plain jit sites — jax.jit(model.forward) traces under the mesh
+        without the caller managing ``use_mesh``, and a ``tune=False``
+        deployment pins kernel-default tilings for every kernel the trace
+        reaches.  No-op when unbound (mesh=None, tune=None)."""
+        with contextlib.ExitStack() as stack:
+            if self.mesh is not None:
+                stack.enter_context(shd.use_mesh(self.mesh))
+                stack.enter_context(self.mesh)
+            if self.tune is False:
+                from repro import tune as tune_lib
+                stack.enter_context(tune_lib.disabled())
             yield
-        else:
-            with shd.use_mesh(self.mesh), self.mesh:
-                yield
 
     # -- mapping introspection ------------------------------------------
     def layer_spec(self, site: str) -> ReBranchSpec:
@@ -156,7 +162,7 @@ class CompiledModel:
 
 
 def compile_model(cfg, *, engine=None, layer_overrides=None, plan=None,
-                  mesh=None) -> CompiledModel:
+                  mesh=None, tune=None) -> CompiledModel:
     """Resolve engines + per-site ROM/SRAM placement and bundle the model.
 
     cfg: ArchConfig (any LM family) or models.cnn.CNNConfig.
@@ -189,6 +195,15 @@ def compile_model(cfg, *, engine=None, layer_overrides=None, plan=None,
         serves CNN configs: the NHWC input is constrained to the
         batch-over-pod / H-over-data serving layout and sharded engines
         ('pallas_sharded') find their mesh without caller ceremony.
+    tune: tuning-table policy for this deployment.  ``None`` (default)
+        leaves the ambient policy alone — kernels of table-aware engines
+        consult the checked-in ``repro.tune`` table as usual.  ``True``
+        asserts the resolved engine actually HAS tuned kernels
+        (``capabilities.tune``) and raises otherwise — deployments that
+        budget on tuned timings fail fast instead of silently running
+        fixed tilings.  ``False`` pins kernel-default tilings for every
+        model call (``repro.tune.disabled()`` around the trace) — the
+        A/B baseline the autotuner and benchmarks measure against.
 
     Every engine named anywhere in the mapping is resolved through the
     strict registry NOW — unknown engines and unsupported fidelity modes
@@ -224,6 +239,12 @@ def compile_model(cfg, *, engine=None, layer_overrides=None, plan=None,
                     f"give the instance a distinct name")
         base = dataclasses.replace(base, trunk_impl=name)
     eng = engine_lib.resolve(base)          # strict + capability gate
+    if tune is True and not eng.capabilities.tune:
+        raise ValueError(
+            f"tune=True but engine {eng.name!r} has no tuned kernels "
+            f"(capabilities.tune is False); deploy on a table-aware "
+            f"engine ('pallas'/'pallas_fused'/'pallas_sharded') or drop "
+            f"the flag")
 
     if plan is None:
         # layer_overrides is the thin constructor: build the plan from the
@@ -244,4 +265,4 @@ def compile_model(cfg, *, engine=None, layer_overrides=None, plan=None,
 
     cfg = dataclasses.replace(cfg, rebranch=base,
                               rebranch_overrides=tuple(sorted(merged.items())))
-    return CompiledModel(cfg, eng, mesh=mesh)
+    return CompiledModel(cfg, eng, mesh=mesh, tune=tune)

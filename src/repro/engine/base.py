@@ -49,12 +49,23 @@ class EngineCapabilities:
         single-device (GSPMD still partitions around it).  ADVISORY like
         ``grads``/``devices`` — an op not listed is still correct, it
         just delegates or runs replicated.
+    tune: whether the engine's kernels consult the ``repro.tune``
+        tuning table for per-geometry tilings.  ``deploy.compile_model``
+        gates its ``tune=True`` request on this; engines without it run
+        fixed tilings and the flag request raises there.
+    fused_ops: primitives with a fused trunk+branch fast path
+        ('matmul'/'conv') — the layer routes a live-branch site through
+        ``fused_conv``/``fused_matmul`` instead of trunk-op + separate
+        branch convs when the op is listed (one pass over the shared
+        im2col patch matrix; see kernels.rebranch_conv).
     """
     fidelity_modes: tuple | None = ("ideal", "per_subarray", "bitserial")
     grads: bool = True
     devices: tuple = ("cpu", "gpu", "tpu")
     epilogue: bool = False
     sharded_ops: tuple = ()
+    tune: bool = False
+    fused_ops: tuple = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -130,6 +141,22 @@ class TrunkEngine:
              epilogue: ConvEpilogue | None = None):
         """NHWC/HWIO frozen-trunk conv with an optional fused epilogue."""
         raise NotImplementedError
+
+    def fused_matmul(self, cfg, x, w_q, w_scale, c, core, u):
+        """Fused trunk+branch ReBranch matmul: one pass over x computes
+        the CiM trunk dot AND the branch compress sketch.  Only engines
+        listing 'matmul' in ``capabilities.fused_ops`` implement it."""
+        raise NotImplementedError(
+            f"engine {self.name!r} has no fused matmul path")
+
+    def fused_conv(self, cfg, x, w_q, w_scale, c, core, u, *, stride=1,
+                   padding="SAME", epilogue: ConvEpilogue | None = None):
+        """Fused trunk+branch ReBranch conv sharing one im2col patch
+        matrix; the epilogue (scale/bias/act) applies AFTER the branch
+        add — act(BN(trunk + branch)) semantics.  Only engines listing
+        'conv' in ``capabilities.fused_ops`` implement it."""
+        raise NotImplementedError(
+            f"engine {self.name!r} has no fused conv path")
 
     def check(self, spec) -> None:
         """Capability gate: raise if ``spec`` asks for something this

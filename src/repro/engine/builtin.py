@@ -1,4 +1,4 @@
-"""The three stock TrunkEngines, registered at import time.
+"""The stock TrunkEngines, registered at import time.
 
 int8_native : pure-jnp CiM macro model (core.cim) on int8 operands — the
               default; exact fidelity control, runs anywhere, what
@@ -11,6 +11,11 @@ pallas      : the fused Pallas kernels (quantise in VMEM, int8 MXU dots,
               scale epilogue) — the TPU deployment fast path; interpret
               mode elsewhere.  Kernel import is deferred so environments
               without the Pallas toolchain can still use the other two.
+pallas_fused: 'pallas' plus the fused trunk+branch kernels
+              (rebranch_conv / rebranch_matmul) as first-class ops —
+              live-branch sites compute trunk AND branch in one pass
+              over the shared patch matrix.  Inference only (no STE
+              backward on the fused paths).
 
 Every engine's backward is the straight-through estimator (dx only, no
 dW — the ROM cannot be written), so branch training is identical under
@@ -66,7 +71,7 @@ class PallasEngine(base.TrunkEngine):
     name = "pallas"
     capabilities = base.EngineCapabilities(
         fidelity_modes=("ideal", "per_subarray", "bitserial"),
-        grads=True, devices=("tpu",), epilogue=True)
+        grads=True, devices=("tpu",), epilogue=True, tune=True)
 
     def matmul(self, cfg, x, w_q, w_scale, *, out_axes=None):
         from repro.kernels import ops as kops   # deferred: optional dep
@@ -80,6 +85,40 @@ class PallasEngine(base.TrunkEngine):
         return base.finish(y, epilogue)
 
 
+class PallasFusedEngine(PallasEngine):
+    """'pallas' plus the fused trunk+branch fast paths as first-class ops.
+
+    Live-branch sites run ``kernels.rebranch_conv`` /
+    ``kernels.rebranch_matmul`` — trunk macro dot AND branch compress
+    sketch in ONE pass over the shared im2col patch matrix (the
+    inference fast path the benchmarks race as 'fused').  Inference
+    only: the fused kernels carry no STE custom_vjp, so ``grads=False``
+    — training deployments should stay on 'pallas'.  Branchless sites
+    and the epilogue contract are inherited unchanged from 'pallas'.
+    """
+
+    name = "pallas_fused"
+    capabilities = base.EngineCapabilities(
+        fidelity_modes=("ideal", "per_subarray", "bitserial"),
+        grads=False, devices=("tpu",), epilogue=True, tune=True,
+        fused_ops=("conv", "matmul"))
+
+    def fused_matmul(self, cfg, x, w_q, w_scale, c, core, u):
+        from repro.kernels import ops as kops   # deferred: optional dep
+        lead = x.shape[:-1]         # kernel is 2D; flatten [..., K]
+        y = kops.rebranch_matmul(x.reshape(-1, x.shape[-1]), w_q, w_scale,
+                                 c, core, u, cfg)
+        return y.reshape(*lead, y.shape[-1])
+
+    def fused_conv(self, cfg, x, w_q, w_scale, c, core, u, *, stride=1,
+                   padding="SAME", epilogue=None):
+        from repro.kernels import ops as kops   # deferred: optional dep
+        y = kops.rebranch_conv(x, w_q, w_scale, c, core, u,
+                               stride=stride, padding=padding, cfg=cfg)
+        return base.finish(y, epilogue)
+
+
 register("int8_native", Int8NativeEngine())
 register("dequant", DequantEngine())
 register("pallas", PallasEngine())
+register("pallas_fused", PallasFusedEngine())

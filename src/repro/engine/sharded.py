@@ -37,7 +37,7 @@ class ShardedPallasEngine(base.TrunkEngine):
     capabilities = base.EngineCapabilities(
         fidelity_modes=("ideal", "per_subarray", "bitserial"),
         grads=True, devices=("tpu",), epilogue=True,
-        sharded_ops=("conv",))
+        sharded_ops=("conv",), tune=True)
 
     # the logical axis whose sharding rule names the mesh axis H shards over
     h_axis = "cnn_h"

@@ -24,6 +24,8 @@ from jax.experimental import pallas as pl
 
 from repro.core import adc as adc_lib
 from repro.core import cim as cim_lib
+from repro.kernels.tiling import (conv_index_maps, grid_and_axes,
+                                  resolve_direct, resolve_tiling)
 
 # The ADC transfer functions are the SAME objects the pure-jnp macro model
 # uses (core.adc) — the comparator convention cannot drift between the
@@ -96,14 +98,63 @@ def cim_block_dot(cfg: cim_lib.CiMConfig, x, w):
     raise ValueError(f"unknown CiM mode: {cfg.mode!r}")
 
 
-def _cim_kernel(cfg: cim_lib.CiMConfig, x_ref, w_ref, o_ref):
-    """One (bm, bn) output block; K accumulated across grid axis 2."""
+def _cim_kernel(cfg: cim_lib.CiMConfig, k_axis: int, x_ref, w_ref, o_ref):
+    """One (bm, bn) output block; K accumulated across grid axis k_axis."""
 
-    @pl.when(pl.program_id(2) == 0)
+    @pl.when(pl.program_id(k_axis) == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
     o_ref[...] += cim_block_dot(cfg, x_ref[...], w_ref[...])
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "bk"))
+def _cim_direct(x_q, w_q, *, cfg, bk):
+    """Plain-XLA lowering of the grid kernel's block decomposition.
+
+    Per K block, integer dots are exact in f32 (``bk * 127 * 127 <
+    2**24``) and the cross-block f32 accumulation happens in the same
+    ascending-K order the grid uses.  Non-ideal modes pad ragged K
+    blocks with zero subarrays, which contribute exactly 0 through
+    every ADC path (adc(0) == 0).  Jitted as its own compilation unit
+    so eager callers dispatch one executable, and the multi-block
+    accumulate runs under ``lax.scan`` so the bits survive a caller's
+    jit too: an outer jit inlines the inner jit and XLA fuses an
+    unrolled accumulate with caller ops (consumer-dependent FMA
+    contraction perturbs the last ulp — ``optimization_barrier`` is
+    dropped by the CPU pipeline before fusion), whereas a scan body is
+    its own fusion domain, compiled identically in every context.
+    """
+    m, k = x_q.shape
+    n = w_q.shape[1]
+    gk = -(-k // bk)
+    if gk == 1:
+        if cfg.mode == "ideal":
+            return _dot_f32(x_q.astype(jnp.float32),
+                            w_q.astype(jnp.float32))
+        return cim_block_dot(cfg, x_q, w_q)
+    pad_k = gk * bk - k
+    xp = jnp.pad(x_q, ((0, 0), (0, pad_k)))
+    wp = jnp.pad(w_q, ((0, pad_k), (0, 0)))
+    if cfg.mode == "ideal":
+        xp, wp = xp.astype(jnp.float32), wp.astype(jnp.float32)
+
+    def body(acc, b):
+        xb = jax.lax.dynamic_slice(xp, (0, b * bk), (m, bk))
+        wb = jax.lax.dynamic_slice(wp, (b * bk, 0), (bk, n))
+        if cfg.mode == "ideal":
+            part = _dot_f32(xb, wb)
+        else:
+            part = cim_block_dot(cfg, xb, wb)
+        return acc + part, None
+
+    out, _ = jax.lax.scan(body, jnp.zeros((m, n), jnp.float32),
+                          jnp.arange(gk))
+    return out
 
 
 def cim_matmul_pallas(
@@ -111,36 +162,56 @@ def cim_matmul_pallas(
     w_q: jax.Array,                 # int8 [K, N]
     cfg: cim_lib.CiMConfig = cim_lib.DEFAULT_CIM,
     *,
-    block_m: int = 128,
-    block_n: int = 128,
-    block_k: int = 512,             # 4 subarrays per VMEM block
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,     # default 512: 4 subarrays per VMEM block
     interpret: bool | None = None,
+    direct: bool | None = None,
 ) -> jax.Array:
-    """Blocked CiM matmul; returns f32 [M, N] integer-valued results."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    """Blocked CiM matmul; returns f32 [M, N] integer-valued results.
+
+    Block sizes left as ``None`` are resolved through the tuning table
+    (``repro.tune``); explicit values win outright.  ``direct=True``
+    forces the plain-XLA lowering (the off-TPU default), ``direct=False``
+    or an explicit ``interpret`` flag forces ``pallas_call``.
+    """
     m, k = x_q.shape
     k2, n = w_q.shape
     assert k == k2, (x_q.shape, w_q.shape)
     if 0 in (m, n, k):
         return jnp.zeros((m, n), jnp.float32)
     rows = cfg.rows_per_subarray
-    assert block_k % rows == 0, "K blocks must hold whole subarrays"
 
-    bm, bn, bk = min(block_m, m), min(block_n, n), block_k
+    t = resolve_tiling("cim_matmul", cfg.mode, str(x_q.dtype), m, k, n,
+                       block_m=block_m, block_n=block_n, block_k=block_k,
+                       defaults=(128, 128, 512), rows=rows)
+    assert t.block_k % rows == 0, "K blocks must hold whole subarrays"
+    # Clamp K blocks subarray-aligned: a 300-wide contraction with the
+    # 512 default used to pad out to 512 columns; 384 (3 subarrays) is
+    # enough and bit-identical (zero subarrays read as 0 in every mode).
+    bk = min(t.block_k, _round_up(k, rows))
+
+    if resolve_direct(interpret, direct, t):
+        return _cim_direct(x_q, w_q, cfg=cfg, bk=bk)
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    bm, bn = min(t.block_m, m), min(t.block_n, n)
     pad_m, pad_n, pad_k = (-m) % bm, (-n) % bn, (-k) % bk
     xp = jnp.pad(x_q, ((0, pad_m), (0, pad_k)))
     wp = jnp.pad(w_q, ((0, pad_k), (0, pad_n)))
     gm, gn, gk = xp.shape[0] // bm, wp.shape[1] // bn, xp.shape[1] // bk
+    grid, _, _, k_axis = grid_and_axes(gm, gn, gk, t.dim_order)
+    x_map, w_map, o_map = conv_index_maps(t.dim_order)
 
     out = pl.pallas_call(
-        functools.partial(_cim_kernel, cfg),
-        grid=(gm, gn, gk),
+        functools.partial(_cim_kernel, cfg, k_axis),
+        grid=grid,
         in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, bk), x_map),
+            pl.BlockSpec((bk, bn), w_map),
         ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_specs=pl.BlockSpec((bm, bn), o_map),
         out_shape=jax.ShapeDtypeStruct((xp.shape[0], wp.shape[1]),
                                        jnp.float32),
         interpret=interpret,

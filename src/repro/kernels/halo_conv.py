@@ -214,24 +214,34 @@ def sharded_rebranch_conv(x, w_q, w_scale, c, core, u,
                           cfg: cim_lib.CiMConfig = cim_lib.CiMConfig(
                               mode="ideal"),
                           *, stride: int = 1, padding: str = "SAME",
-                          mesh=None, axis: str = "data"):
+                          mesh=None, axis: str = "data", tiling=None):
     """H-sharded fused ReBranch conv (trunk + compress sketch in one pass
     per shard).  The branch epilogue ``(t1 @ core) @ U`` is per-patch-row,
     so it shards for free with the output rows.  Trunk contribution is
     bit-identical to ``rebranch_conv_pallas``; the float branch GEMMs
     match to 1 ulp (see the module docstring).  Forward-only, like its
-    unsharded twin."""
+    unsharded twin.
+
+    ``tiling`` (a ``repro.tune.Tiling``) pins the per-shard kernel's
+    block sizes; left ``None``, each shard consults the tuning table
+    keyed on its *local* patch-GEMM geometry.  Either way bit-parity is
+    safe: legal tilings never change the trunk's k-partition, so a
+    sharded lookup (local M) and an unsharded one (global M) landing on
+    different entries still produce bit-identical trunks."""
     plan, xp = _prepare(x, w_q.shape[0], w_q.shape[1], stride, padding,
                         mesh.shape[axis])
     if plan is None:
         raise ValueError(
             f"halo plan infeasible: H={x.shape[1]} kernel={w_q.shape[0]} "
             f"stride={stride} over {mesh.shape[axis]} shards")
+    bm, bn, bk = ((tiling.block_m, tiling.block_n, tiling.block_k)
+                  if tiling is not None else (None, None, None))
 
     def body(xl, w_q, w_scale, c, core, u):
         xe = _exchange(xl, plan, axis)
         return rebranch_conv_pallas(xe, w_q, w_scale, c, core, u, cfg,
-                                    stride=stride, padding="VALID")
+                                    stride=stride, padding="VALID",
+                                    block_m=bm, block_n=bn, block_k=bk)
 
     spec = P(None, axis, None, None)
     out = shard_map(body, mesh=mesh,

@@ -58,10 +58,11 @@ def _bwd(cfg, res, g):
 trunk_matmul_pallas.defvjp(_fwd, _bwd)
 
 
-@jax.jit
-def rebranch_matmul(x, w_q, w_scale, c, core, u):
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def rebranch_matmul(x, w_q, w_scale, c, core, u,
+                    cfg: cim_lib.CiMConfig = cim_lib.CiMConfig(mode="ideal")):
     """Fused trunk+branch ReBranch layer forward (beyond-paper fast path)."""
-    return rebranch_matmul_pallas(x, w_q, w_scale, c, core, u)
+    return rebranch_matmul_pallas(x, w_q, w_scale, c, core, u, cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -100,9 +101,10 @@ def _conv_bwd(cfg, stride, padding, res, g):
 trunk_conv.defvjp(_conv_fwd, _conv_bwd)
 
 
-@functools.partial(jax.jit, static_argnames=("stride", "padding"))
+@functools.partial(jax.jit, static_argnames=("cfg", "stride", "padding"))
 def rebranch_conv(x, w_q, w_scale, c, core, u,
-                  stride: int = 1, padding: str = "SAME"):
+                  stride: int = 1, padding: str = "SAME",
+                  cfg: cim_lib.CiMConfig = cim_lib.CiMConfig(mode="ideal")):
     """Fused trunk+branch ReBranch conv forward (beyond-paper fast path)."""
-    return rebranch_conv_pallas(x, w_q, w_scale, c, core, u,
+    return rebranch_conv_pallas(x, w_q, w_scale, c, core, u, cfg,
                                 stride=stride, padding=padding)

@@ -43,8 +43,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import cim as cim_lib
-from repro.core.quant import quantize_activations
+from repro.core.quant import quant_rows
 from repro.kernels.cim_matmul import cim_block_dot, cim_matmul_pallas
+from repro.kernels.tiling import (Tiling, conv_index_maps, grid_and_axes,
+                                  resolve_direct, resolve_tiling)
 
 
 def _round_up(x: int, m: int) -> int:
@@ -59,9 +61,10 @@ def _patch_matrix(x: jax.Array, kh: int, kw: int, stride: int, padding: str):
 
 
 def _quant_rows(x: jax.Array):
-    """In-VMEM dynamic int8 quantisation, per (row, k-block) — the same
-    quantiser as the int8_native path (pure jnp, safe in a kernel body)."""
-    return quantize_activations(x)
+    """In-VMEM dynamic int8 quantisation, per (row, k-block) — the
+    reciprocal-form quantiser (pure jnp, safe in a kernel body; see
+    core.quant.quant_rows for the bit-identity argument)."""
+    return quant_rows(x)
 
 
 # ---------------------------------------------------------------------------
@@ -75,23 +78,23 @@ def cim_conv_pallas(
     *,
     stride: int = 1,
     padding: str = "SAME",
-    block_m: int = 128,
-    block_n: int = 128,
-    block_k: int = 512,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
     interpret: bool | None = None,
+    direct: bool | None = None,
 ) -> jax.Array:
     """Blocked CiM conv; returns f32 [N, OH, OW, C_out] integer-valued
     results, bit-compatible with core.cim.cim_conv_model."""
     kh, kw, c_in, c_out = w_q.shape
     p, (n, oh, ow) = _patch_matrix(x_q, kh, kw, stride, padding)
-    # clamp K blocks to the (subarray-aligned) patch width so small-R convs
-    # (e.g. a 3x3x3 stem, R=27) don't pad the contraction out to block_k
-    rows = cfg.rows_per_subarray
-    bk = min(block_k, _round_up(kh * kw * c_in, rows))
+    # K blocks are clamped to the subarray-aligned patch width inside
+    # cim_matmul_pallas, so small-R convs (e.g. a 3x3x3 stem, R=27)
+    # don't pad the contraction out to block_k.
     out = cim_matmul_pallas(
         p, w_q.reshape(kh * kw * c_in, c_out), cfg,
-        block_m=block_m, block_n=block_n, block_k=bk,
-        interpret=interpret)
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=interpret, direct=direct)
     return out.reshape(n, oh, ow, c_out)
 
 
@@ -99,8 +102,8 @@ def cim_conv_pallas(
 # float-in trunk conv: in-VMEM quantisation + macro dot + scale epilogue
 # ---------------------------------------------------------------------------
 
-def _trunk_conv_kernel(cfg, x_ref, wq_ref, o_ref):
-    @pl.when(pl.program_id(2) == 0)
+def _trunk_conv_kernel(cfg, k_axis, x_ref, wq_ref, o_ref):
+    @pl.when(pl.program_id(k_axis) == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
@@ -117,7 +120,20 @@ def _conv_blocks(m: int, r: int, c_out: int, bm: int, bn: int, bk: int,
     return min(bm, m), min(bn, c_out), bk
 
 
-def _trunk_patch_dot(p, w2d, cfg, block_m, block_n, block_k, interpret):
+def _resolve_conv_tiling(x, w_q, cfg, stride, padding,
+                         block_m, block_n, block_k) -> Tiling:
+    """Tuning-table tiling for a trunk conv's implied patch GEMM."""
+    kh, kw, c_in, c_out = w_q.shape
+    _, oh = cim_lib.conv_pads(x.shape[1], kh, stride, padding)
+    _, ow = cim_lib.conv_pads(x.shape[2], kw, stride, padding)
+    return resolve_tiling(
+        "trunk_conv", cfg.mode, str(x.dtype),
+        x.shape[0] * oh * ow, kh * kw * c_in, c_out,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        defaults=(128, 128, 512), rows=cfg.rows_per_subarray)
+
+
+def _trunk_patch_dot(p, w2d, cfg, t: Tiling, interpret):
     """Blocked Pallas trunk pass over the flat patch matrix.
 
     p [M, R] float patches, w2d [R, C_out] int8 — returns the UNscaled f32
@@ -125,28 +141,190 @@ def _trunk_patch_dot(p, w2d, cfg, block_m, block_n, block_k, interpret):
     stay subarray-aligned so the macro fidelity model sees the same row
     grouping as the unblocked oracle.
     """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     m, r = p.shape
     c_out = w2d.shape[1]
-    bm, bn, bk = _conv_blocks(m, r, c_out, block_m, block_n, block_k,
+    bm, bn, bk = _conv_blocks(m, r, c_out, t.block_m, t.block_n, t.block_k,
                               cfg.rows_per_subarray)
     pad_m, pad_n, pad_k = (-m) % bm, (-c_out) % bn, (-r) % bk
     pp = jnp.pad(p, ((0, pad_m), (0, pad_k)))
     wp = jnp.pad(w2d, ((0, pad_k), (0, pad_n)))
     gm, gn, gk = pp.shape[0] // bm, wp.shape[1] // bn, pp.shape[1] // bk
+    grid, _, _, k_axis = grid_and_axes(gm, gn, gk, t.dim_order)
+    x_map, w_map, o_map = conv_index_maps(t.dim_order)
 
     out = pl.pallas_call(
-        functools.partial(_trunk_conv_kernel, cfg),
-        grid=(gm, gn, gk),
+        functools.partial(_trunk_conv_kernel, cfg, k_axis),
+        grid=grid,
         in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, bk), x_map),
+            pl.BlockSpec((bk, bn), w_map),
         ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_specs=pl.BlockSpec((bm, bn), o_map),
         out_shape=jax.ShapeDtypeStruct((pp.shape[0], wp.shape[1]),
                                        jnp.float32),
         interpret=interpret,
     )(pp, wp)
     return out[:m, :c_out]
+
+
+# ---------------------------------------------------------------------------
+# direct (plain-XLA) trunk lowering — the off-TPU fast path
+# ---------------------------------------------------------------------------
+
+def _stacked_patches(x, kh, kw, stride, padding):
+    """Tap-major patch matrix via stacked strided slices.
+
+    Produces exactly the same P [M, taps*C_in] as :func:`_patch_matrix`
+    (tap-major layout), but through kh*kw strided views + one stack —
+    much cheaper for XLA:CPU than the gather-based im2col.
+    """
+    n, h, w, c_in = x.shape
+    (ph0, ph1), oh = cim_lib.conv_pads(h, kh, stride, padding)
+    (pw0, pw1), ow = cim_lib.conv_pads(w, kw, stride, padding)
+    xp = jnp.pad(x, ((0, 0), (ph0, ph1), (pw0, pw1), (0, 0)))
+    hi = (oh - 1) * stride + 1
+    wi = (ow - 1) * stride + 1
+    cols = [xp[:, i:i + hi:stride, j:j + wi:stride, :]
+            for i in range(kh) for j in range(kw)]
+    p = jnp.stack(cols, axis=3).reshape(n * oh * ow, kh * kw * c_in)
+    return p, (n, oh, ow), ((ph0, ph1), (pw0, pw1), hi, wi)
+
+
+def _block_absmaxes(x, p, kh, kw, c_in, stride, pads, bk):
+    """Per-(patch-row, k-block) absolute maxima, without widening P.
+
+    Returns ([(k0, k1)], [absmax (M, 1)]) matching the kernel's k-block
+    partition.  The maxima are assembled from per-pixel channel maxima
+    via shifted-window max reductions when block boundaries allow
+    (separable for gk == 1; per-tap windows when blocks hold whole
+    taps); the general ragged case falls back to column maxima over P.
+    Zero conv padding never raises a max, so all three routes compute
+    the exact same numbers the kernel sees in its padded (bm, bk) slab.
+    """
+    (ph0, ph1), (pw0, pw1), hi, wi = pads
+    taps = kh * kw
+    m, r = p.shape
+    gk = -(-r // bk)
+    if gk == 1:
+        am = jnp.pad(jnp.max(jnp.abs(x), axis=-1),
+                     ((0, 0), (ph0, ph1), (pw0, pw1)))
+        mw = am[:, :, 0:wi:stride]
+        for j in range(1, kw):
+            mw = jnp.maximum(mw, am[:, :, j:j + wi:stride])
+        mh = mw[:, 0:hi:stride]
+        for i in range(1, kh):
+            mh = jnp.maximum(mh, mw[:, i:i + hi:stride])
+        return [(0, r)], [mh.reshape(m, 1)]
+    if bk % c_in == 0:
+        # block boundaries fall on tap boundaries: per-tap channel-max
+        # windows, then a max over each block's taps
+        am = jnp.pad(jnp.max(jnp.abs(x), axis=-1),
+                     ((0, 0), (ph0, ph1), (pw0, pw1)))
+        amt = [am[:, i:i + hi:stride, j:j + wi:stride]
+               for i in range(kh) for j in range(kw)]
+        tpb = bk // c_in
+        bounds, absmaxes = [], []
+        for b in range(gk):
+            t0, t1 = b * tpb, min((b + 1) * tpb, taps)
+            blk = amt[t0]
+            for t in range(t0 + 1, t1):
+                blk = jnp.maximum(blk, amt[t])
+            bounds.append((t0 * c_in, min(t1 * c_in, r)))
+            absmaxes.append(blk.reshape(m, 1))
+        return bounds, absmaxes
+    bounds, absmaxes = [], []
+    for b in range(gk):
+        k0, k1 = b * bk, min((b + 1) * bk, r)
+        bounds.append((k0, k1))
+        absmaxes.append(jnp.max(jnp.abs(p[:, k0:k1]), axis=1, keepdims=True))
+    return bounds, absmaxes
+
+
+def _direct_trunk_patch_dot(p, bounds, absmaxes, w2d, cfg):
+    """Direct lowering of ``_trunk_patch_dot``'s block accumulation.
+
+    Per k-block: the same reciprocal quantisation the kernel applies in
+    VMEM, the same macro math (f32 GEMM in ideal mode — exact, block
+    dots stay under 2**24 — ``cim_block_dot`` otherwise), accumulated in
+    the same ascending-K order.  Ragged tails padded with zero rows read
+    as 0 through every ADC path, matching the kernel's padded slabs.
+
+    The multi-block accumulate runs under ``lax.scan``, NOT an unrolled
+    add chain: an open ``acc + dot*scale`` elementwise graph is fused by
+    XLA with whatever the caller puts next, and the FMA contraction LLVM
+    then applies depends on that consumer — the same conv would round
+    differently eagerly vs under a caller's jit, breaking the eager/jit
+    bit-parity the sharded engine contracts (``optimization_barrier``
+    does NOT help: XLA's CPU pipeline drops it before fusion).  A scan
+    body is compiled as a while-loop body — its own fusion domain,
+    bit-identical in every calling context, the same boundary the
+    interpret-mode ``pallas_call`` grid enjoys.
+
+    The per-block ``dot * scale`` parts are computed OUTSIDE the scan on
+    ragged static slices and only the adds run inside it: a 64-column
+    tail block costs a 64-wide GEMM instead of being zero-padded out to
+    ``bk`` (78% wasted MACs on a 576-wide DarkNet-19 patch row).  This
+    is value-exact (padded columns quantise to 0 and contribute exact-0
+    dot terms; ``adc(0) == 0`` on every fidelity path) and bit-stable:
+    a lone mul cannot be FMA-contracted — only the adds can, and those
+    stay behind the scan boundary.
+    """
+    m, r = p.shape
+    n = w2d.shape[1]
+    gk = len(bounds)
+    rows = cfg.rows_per_subarray
+    w2f = w2d.astype(jnp.float32)
+
+    def block_part(k0, k1, absmax):
+        # reciprocal form throughout — matches quant_rows bit-for-bit
+        # (jitted XLA turns /127 into *(1/127) anyway; see core.quant)
+        pb = p[:, k0:k1]
+        scale = jnp.maximum(absmax, 1e-8) * (1.0 / 127.0)
+        if cfg.mode == "ideal":
+            return (jnp.round(pb * (1.0 / scale)) @ w2f[k0:k1]) * scale
+        q = jnp.clip(jnp.round(pb * (1.0 / scale)),
+                     -127.0, 127.0).astype(jnp.int8)
+        pad = _round_up(k1 - k0, rows) - (k1 - k0)
+        return cim_block_dot(cfg, jnp.pad(q, ((0, 0), (0, pad))),
+                             jnp.pad(w2d[k0:k1], ((0, pad), (0, 0)))) * scale
+
+    if gk == 1:
+        # single block — no cross-block accumulate to protect (the lone
+        # dot*scale's downstream adds all carry exact-zero or post-mul
+        # addends, where FMA contraction is value-exact)
+        (k0, k1), = bounds
+        return block_part(k0, k1, absmaxes[0])
+    parts = jnp.stack([block_part(k0, k1, am)
+                       for (k0, k1), am in zip(bounds, absmaxes)])
+    out, _ = jax.lax.scan(lambda acc, pt: (acc + pt, None),
+                          jnp.zeros((m, n), jnp.float32), parts)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "block_k", "stride",
+                                             "padding"))
+def _direct_trunk_conv(x, w_q, *, cfg, block_k, stride, padding):
+    """Direct trunk conv; returns (unscaled trunk [M, C_out], P).
+
+    Jitted as its own compilation unit so eager callers dispatch one
+    executable; the bits are identical whether the caller is eager,
+    jitted, or a shard_map body — the sharded trunk's bit-parity
+    contract depends on this.  The jit alone does not provide that (an
+    outer jit inlines it); the scan inside
+    :func:`_direct_trunk_patch_dot` does.
+    """
+    kh, kw, c_in, c_out = w_q.shape
+    rows = cfg.rows_per_subarray
+    r = kh * kw * c_in
+    bk = min(block_k, _round_up(r, rows))
+    xf = x.astype(jnp.float32)     # the grid kernel quantises f32 slabs
+    p, _, pads = _stacked_patches(xf, kh, kw, stride, padding)
+    bounds, absmaxes = _block_absmaxes(xf, p, kh, kw, c_in, stride, pads, bk)
+    out = _direct_trunk_patch_dot(p, bounds, absmaxes,
+                                  w_q.reshape(r, c_out), cfg)
+    return out, p
 
 
 def trunk_conv_pallas(
@@ -157,20 +335,33 @@ def trunk_conv_pallas(
     *,
     stride: int = 1,
     padding: str = "SAME",
-    block_m: int = 128,
-    block_n: int = 128,
-    block_k: int = 512,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
     interpret: bool | None = None,
+    direct: bool | None = None,
 ) -> jax.Array:
-    """Frozen-trunk convolution, quantisation fused into the macro pass."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    """Frozen-trunk convolution, quantisation fused into the macro pass.
+
+    Block sizes left as ``None`` come from the tuning table
+    (``repro.tune``), keyed on this conv's implied patch-GEMM geometry.
+    Off-TPU the trunk lowers directly to blocked XLA GEMMs replicating
+    the grid kernel's decomposition (``direct``/``interpret`` override).
+    """
     kh, kw, c_in, c_out = w_q.shape
-    p, (n, oh, ow) = _patch_matrix(x, kh, kw, stride, padding)
-    if p.shape[0] == 0:
-        return jnp.zeros((n, oh, ow, c_out), x.dtype)
-    out = _trunk_patch_dot(p, w_q.reshape(-1, c_out), cfg,
-                           block_m, block_n, block_k, interpret)
+    _, oh = cim_lib.conv_pads(x.shape[1], kh, stride, padding)
+    _, ow = cim_lib.conv_pads(x.shape[2], kw, stride, padding)
+    if x.shape[0] * oh * ow == 0:
+        return jnp.zeros((x.shape[0], oh, ow, c_out), x.dtype)
+    t = _resolve_conv_tiling(x, w_q, cfg, stride, padding,
+                             block_m, block_n, block_k)
+    if resolve_direct(interpret, direct, t):
+        n = x.shape[0]
+        out, _ = _direct_trunk_conv(x, w_q, cfg=cfg, block_k=t.block_k,
+                                    stride=stride, padding=padding)
+    else:
+        p, (n, oh, ow) = _patch_matrix(x, kh, kw, stride, padding)
+        out = _trunk_patch_dot(p, w_q.reshape(-1, c_out), cfg, t, interpret)
     out = out * w_scale.reshape(1, -1).astype(jnp.float32)
     return out.reshape(n, oh, ow, c_out).astype(x.dtype)
 
@@ -186,7 +377,12 @@ def structured_compress(p: jax.Array, c2d: jax.Array, taps: int) -> jax.Array:
     P[m, t*C_in:(t+1)*C_in] @ C[:, j].  The patch matrix is tap-major, so
     the per-tap dot is a plain matmul on a ZERO-COPY reshape — FLOPs are
     M * taps * C_in * C_c, scaling with ``taps`` (the dense
-    ``P @ kron(I_taps, C)`` form costs taps^2).
+    ``P @ kron(I_taps, C)`` form costs taps^2).  (Folding the compress
+    and core into one ``P @ (blkdiag(C) @ core_flat)`` GEMM is
+    mathematically equivalent and looks cheaper on paper, but measures
+    slower end to end on CPU: the wide folded GEMM forces a second
+    288-wide streaming read of P, while this skinny leg stays hot in
+    cache behind the trunk dot.)
     """
     m = p.shape[0]
     c_in, c_c = c2d.shape
@@ -208,10 +404,11 @@ def rebranch_conv_pallas(
     *,
     stride: int = 1,
     padding: str = "SAME",
-    block_m: int = 128,
-    block_n: int = 128,
-    block_k: int = 512,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
     interpret: bool | None = None,
+    direct: bool | None = None,
 ) -> jax.Array:
     """Fused ReBranch convolution forward (beyond-paper fast path).
 
@@ -229,20 +426,26 @@ def rebranch_conv_pallas(
     block once per output-channel block anyway, so the one extra read is
     noise, and XLA overlaps the small sketch dot with the trunk kernel.
     """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
     kh, kw, c_in, c_out = w_q.shape
     assert core.shape[:2] == (kh, kw), (core.shape, w_q.shape)
     c_c, c_u = core.shape[2], core.shape[3]
-    taps = kh * kw
 
-    p, (n, oh, ow) = _patch_matrix(x, kh, kw, stride, padding)
-    if p.shape[0] == 0:
-        return jnp.zeros((n, oh, ow, c_out), x.dtype)
-    trunk = _trunk_patch_dot(p, w_q.reshape(-1, c_out), cfg,
-                             block_m, block_n, block_k, interpret)
+    _, oh = cim_lib.conv_pads(x.shape[1], kh, stride, padding)
+    _, ow = cim_lib.conv_pads(x.shape[2], kw, stride, padding)
+    if x.shape[0] * oh * ow == 0:
+        return jnp.zeros((x.shape[0], oh, ow, c_out), x.dtype)
+    t = _resolve_conv_tiling(x, w_q, cfg, stride, padding,
+                             block_m, block_n, block_k)
+    if resolve_direct(interpret, direct, t):
+        # trunk and branch share the stacked patch matrix
+        n = x.shape[0]
+        trunk, p = _direct_trunk_conv(x, w_q, cfg=cfg, block_k=t.block_k,
+                                      stride=stride, padding=padding)
+    else:
+        p, (n, oh, ow) = _patch_matrix(x, kh, kw, stride, padding)
+        trunk = _trunk_patch_dot(p, w_q.reshape(-1, c_out), cfg, t, interpret)
     out = trunk * w_scale.reshape(1, -1).astype(jnp.float32)
-    t1 = structured_compress(p, c.reshape(c_in, c_c), taps)
-    branch = (t1 @ core.reshape(taps * c_c, c_u).astype(jnp.float32)
+    t1 = structured_compress(p, c.reshape(c_in, c_c), kh * kw)
+    branch = (t1 @ core.reshape(kh * kw * c_c, c_u).astype(jnp.float32)
               ) @ u.reshape(c_u, c_out).astype(jnp.float32)
     return (out + branch).reshape(n, oh, ow, c_out).astype(x.dtype)

@@ -4,28 +4,42 @@ The naive ReBranch layer reads the activation block twice from HBM — once
 for the int8 trunk matmul and once for the branch compress projection.
 This kernel fuses both: one pass over x per (m, k) block computes
 
-  trunk[m, n] += (quant_blk(x) @ w_q) * scale_blk      (int8 MXU dot)
-  t1[m, c]    += x @ C                                 (compress sketch)
+  trunk[m, n] += macro(quant_blk(x), w_q) * scale_blk   (CiM macro dot)
+  t1[m, c]    += x @ C                                  (compress sketch)
 
 with the tiny epilogue  out = trunk * w_scale + (t1 @ core) @ U  left to
 XLA (it is O(M*(N+C)) — negligible).  Activation quantisation happens
 in VMEM at per-(row, k-block) granularity — finer than the layer-wide
-per-row scheme, so fidelity is equal or better.
+per-row scheme, so fidelity is equal or better.  The macro dot goes
+through ``cim_matmul.cim_block_dot``, so all three fidelity modes
+(ideal / per_subarray / bitserial) are available, bit-compatible with
+the conv kernels; K blocks are subarray-aligned for the same reason.
 
 Saves one full HBM read of x and the intermediate t1 round-trip.
 """
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.quant import INT8_MAX
+from repro.core import cim as cim_lib
+from repro.core.quant import quant_rows
+from repro.kernels.cim_matmul import cim_block_dot
+from repro.kernels.tiling import (grid_and_axes, resolve_direct,
+                                  resolve_tiling)
 
 
-def _rebranch_kernel(x_ref, wq_ref, c_ref, trunk_ref, t1_ref):
-    n_idx, k_idx = pl.program_id(1), pl.program_id(2)
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _rebranch_kernel(cfg, n_axis, k_axis, x_ref, wq_ref, c_ref,
+                     trunk_ref, t1_ref):
+    n_idx, k_idx = pl.program_id(n_axis), pl.program_id(k_axis)
 
     @pl.when(k_idx == 0)
     def _init_trunk():
@@ -38,15 +52,8 @@ def _rebranch_kernel(x_ref, wq_ref, c_ref, trunk_ref, t1_ref):
     x = x_ref[...].astype(jnp.float32)            # (bm, bk)
 
     # in-VMEM dynamic quantisation (per row, per k-block)
-    absmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
-    scale = jnp.maximum(absmax, 1e-8) / INT8_MAX
-    x_q = jnp.clip(jnp.round(x / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
-
-    acc = jax.lax.dot_general(
-        x_q, wq_ref[...], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.int32,
-    ).astype(jnp.float32)
-    trunk_ref[...] += acc * scale
+    x_q, scale = quant_rows(x)
+    trunk_ref[...] += cim_block_dot(cfg, x_q, wq_ref[...]) * scale
 
     @pl.when(n_idx == 0)
     def _compress():
@@ -56,6 +63,67 @@ def _rebranch_kernel(x_ref, wq_ref, c_ref, trunk_ref, t1_ref):
         )
 
 
+@functools.partial(jax.jit, static_argnames=("cfg", "bk"))
+def _direct_rebranch(x, w_q, c, *, cfg, bk):
+    """Plain-XLA lowering of the fused kernel's block decomposition.
+
+    Same per-k-block reciprocal quantisation, macro math and ascending-K
+    accumulation for trunk AND t1 as the grid kernel (see the conv twin
+    in rebranch_conv.py for the exactness argument).  Jitted as its own
+    compilation unit, with the multi-block accumulate under ``lax.scan``
+    — a while-body fusion domain that keeps the bits caller-context-
+    independent (an unrolled accumulate gets consumer-dependent FMA
+    contraction once an outer jit inlines the inner jit; see
+    ``_direct_trunk_patch_dot``).
+    """
+    m, k = x.shape
+    n = w_q.shape[1]
+    rows = cfg.rows_per_subarray
+    gk = -(-k // bk)
+    cdim = c.shape[1]
+
+    def block(xb, wb, cb):
+        """One k-block's (trunk part, t1 part) — shared by both paths."""
+        absmax = jnp.max(jnp.abs(xb), axis=1, keepdims=True)
+        scale = jnp.maximum(absmax, 1e-8) * (1.0 / 127.0)
+        if cfg.mode == "ideal":
+            q = jnp.round(xb * (1.0 / scale))
+            part = (q @ wb.astype(jnp.float32)) * scale
+        else:
+            q = jnp.clip(jnp.round(xb * (1.0 / scale)),
+                         -127.0, 127.0).astype(jnp.int8)
+            part = cim_block_dot(cfg, q, wb) * scale
+        return part, xb @ cb.astype(jnp.float32)
+
+    if gk == 1:
+        xb = x.astype(jnp.float32)
+        if cfg.mode != "ideal":
+            pad = _round_up(k, rows) - k
+            trunk, t1 = block(jnp.pad(xb, ((0, 0), (0, pad))),
+                              jnp.pad(w_q, ((0, pad), (0, 0))),
+                              jnp.pad(c, ((0, pad), (0, 0))))
+            return trunk, t1
+        return block(xb, w_q, c)
+
+    pad = gk * bk - k
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, pad)))
+    wp = jnp.pad(w_q, ((0, pad), (0, 0)))
+    cp = jnp.pad(c, ((0, pad), (0, 0)))
+
+    def body(carry, b):
+        trunk, t1 = carry
+        xb = jax.lax.dynamic_slice(xp, (0, b * bk), (m, bk))
+        wb = jax.lax.dynamic_slice(wp, (b * bk, 0), (bk, n))
+        cb = jax.lax.dynamic_slice(cp, (b * bk, 0), (bk, cdim))
+        part, t1_part = block(xb, wb, cb)
+        return (trunk + part, t1 + t1_part), None
+
+    (trunk, t1), _ = jax.lax.scan(
+        body, (jnp.zeros((m, n), jnp.float32),
+               jnp.zeros((m, cdim), jnp.float32)), jnp.arange(gk))
+    return trunk, t1
+
+
 def rebranch_matmul_pallas(
     x: jax.Array,          # [M, K] float
     w_q: jax.Array,        # [K, N] int8 (ROM trunk)
@@ -63,46 +131,73 @@ def rebranch_matmul_pallas(
     c: jax.Array,          # [K, C] fixed compress (ROM)
     core: jax.Array,       # [C, U] trainable (SRAM)
     u: jax.Array,          # [U, N] fixed decompress (ROM)
+    cfg: cim_lib.CiMConfig = cim_lib.CiMConfig(mode="ideal"),
     *,
-    block_m: int = 128,
-    block_n: int = 256,
-    block_k: int = 512,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
     interpret: bool | None = None,
+    direct: bool | None = None,
 ) -> jax.Array:
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
     m, k = x.shape
     n = w_q.shape[1]
     cdim = c.shape[1]
+    rows = cfg.rows_per_subarray
 
-    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
-    pad_m, pad_n, pad_k = (-m) % bm, (-n) % bn, (-k) % bk
-    xp = jnp.pad(x, ((0, pad_m), (0, pad_k)))
-    wp = jnp.pad(w_q, ((0, pad_k), (0, pad_n)))
-    cp = jnp.pad(c, ((0, pad_k), (0, 0)))
-    gm = xp.shape[0] // bm
-    gn = wp.shape[1] // bn
-    gk = xp.shape[1] // bk
+    t = resolve_tiling("rebranch_matmul", cfg.mode, str(x.dtype), m, k, n,
+                       block_m=block_m, block_n=block_n, block_k=block_k,
+                       defaults=(128, 256, 512), rows=rows)
+    assert t.block_k % rows == 0, "K blocks must hold whole subarrays"
+    bk = min(t.block_k, _round_up(k, rows))
 
-    trunk, t1 = pl.pallas_call(
-        _rebranch_kernel,
-        grid=(gm, gn, gk),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((bk, cdim), lambda i, j, kk: (kk, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-            pl.BlockSpec((bm, cdim), lambda i, j, kk: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((xp.shape[0], wp.shape[1]), jnp.float32),
-            jax.ShapeDtypeStruct((xp.shape[0], cdim), jnp.float32),
-        ],
-        interpret=interpret,
-    )(xp, wp, cp)
+    if resolve_direct(interpret, direct, t):
+        trunk, t1 = _direct_rebranch(x, w_q, c, cfg=cfg, bk=bk)
+    else:
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        bm, bn = min(t.block_m, m), min(t.block_n, n)
+        pad_m, pad_n, pad_k = (-m) % bm, (-n) % bn, (-k) % bk
+        xp = jnp.pad(x, ((0, pad_m), (0, pad_k)))
+        wp = jnp.pad(w_q, ((0, pad_k), (0, pad_n)))
+        cp = jnp.pad(c, ((0, pad_k), (0, 0)))
+        gm = xp.shape[0] // bm
+        gn = wp.shape[1] // bn
+        gk = xp.shape[1] // bk
+        grid, _, n_axis, k_axis = grid_and_axes(gm, gn, gk, t.dim_order)
+        if t.dim_order == "mnk":
+            x_map = lambda i, j, kk: (i, kk)
+            w_map = lambda i, j, kk: (kk, j)
+            c_map = lambda i, j, kk: (kk, 0)
+            o_map = lambda i, j, kk: (i, j)
+            t1_map = lambda i, j, kk: (i, 0)
+        else:
+            x_map = lambda kk, i, j: (i, kk)
+            w_map = lambda kk, i, j: (kk, j)
+            c_map = lambda kk, i, j: (kk, 0)
+            o_map = lambda kk, i, j: (i, j)
+            t1_map = lambda kk, i, j: (i, 0)
 
-    trunk = trunk[:m, :n] * w_scale.reshape(1, -1).astype(jnp.float32)
-    branch = (t1[:m] @ core.astype(jnp.float32)) @ u.astype(jnp.float32)
+        trunk, t1 = pl.pallas_call(
+            functools.partial(_rebranch_kernel, cfg, n_axis, k_axis),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk), x_map),
+                pl.BlockSpec((bk, bn), w_map),
+                pl.BlockSpec((bk, cdim), c_map),
+            ],
+            out_specs=[
+                pl.BlockSpec((bm, bn), o_map),
+                pl.BlockSpec((bm, cdim), t1_map),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((xp.shape[0], wp.shape[1]),
+                                     jnp.float32),
+                jax.ShapeDtypeStruct((xp.shape[0], cdim), jnp.float32),
+            ],
+            interpret=interpret,
+        )(xp, wp, cp)
+        trunk, t1 = trunk[:m, :n], t1[:m]
+
+    trunk = trunk * w_scale.reshape(1, -1).astype(jnp.float32)
+    branch = (t1 @ core.astype(jnp.float32)) @ u.astype(jnp.float32)
     return (trunk + branch).astype(x.dtype)

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import cim as cim_lib
-from repro.core.quant import quantize_activations
+from repro.core.quant import quant_rows
 
 
 def cim_matmul_ref(x_q: jax.Array, w_q: jax.Array,
@@ -21,39 +21,23 @@ def cim_matmul_ref(x_q: jax.Array, w_q: jax.Array,
     return cim_lib.cim_matmul_model(x_q, w_q, cfg)
 
 
-def _block_quant(x: jax.Array, block_k: int):
-    """Per-(row, k-block) dynamic int8 quantisation — matches the fused
-    kernel's in-VMEM quantisation granularity exactly."""
-    m, k = x.shape
-    assert k % block_k == 0
-    return quantize_activations(x.reshape(m, k // block_k, block_k))
-
-
 def rebranch_matmul_ref(x: jax.Array, w_q: jax.Array, w_scale: jax.Array,
                         c: jax.Array, core: jax.Array, u: jax.Array,
+                        cfg: cim_lib.CiMConfig = cim_lib.CiMConfig(
+                            mode="ideal"),
                         block_k: int = 512) -> jax.Array:
     """Oracle for kernels.rebranch_matmul (fused trunk + branch).
 
-      trunk = sum_kb (quant_kb(x) @ w_q[kb]) * scale_kb        (int8 path)
+      trunk = sum_kb macro(quant_kb(x), w_q[kb]) * scale_kb   (CiM macro)
       out   = trunk * w_scale + ((x @ C) @ core) @ U
+
+    The trunk goes block-by-block through the core macro model (all
+    three fidelity modes), with the kernel's reciprocal-form per-(row,
+    k-block) quantisation — see :func:`_blocked_cim_trunk`.
     """
-    m, k = x.shape
-    pad = (-k) % block_k
-    if pad:
-        xp = jnp.pad(x, ((0, 0), (0, pad)))
-        wp = jnp.pad(w_q, ((0, pad), (0, 0)))
-        cp = jnp.pad(c, ((0, pad), (0, 0)))
-    else:
-        xp, wp, cp = x, w_q, c
-    x_q, scale = _block_quant(xp.astype(jnp.float32), block_k)
-    wb = wp.reshape(-1, block_k, w_q.shape[1])
-    acc = jnp.einsum(
-        "msk,skn->msn",
-        x_q.astype(jnp.float32) * scale,
-        wb.astype(jnp.float32),
-    ).sum(axis=1)
+    acc = _blocked_cim_trunk(x.astype(jnp.float32), w_q, cfg, block_k)
     trunk = acc * w_scale.reshape(1, -1).astype(jnp.float32)
-    t1 = xp.astype(jnp.float32) @ cp.astype(jnp.float32)
+    t1 = x.astype(jnp.float32) @ c.astype(jnp.float32)
     branch = (t1 @ core.astype(jnp.float32)) @ u.astype(jnp.float32)
     return (trunk + branch).astype(x.dtype)
 
@@ -82,7 +66,7 @@ def _blocked_cim_trunk(p: jax.Array, w_mat: jax.Array,
     acc = jnp.zeros((m, w_mat.shape[1]), jnp.float32)
     for kb in range(pp.shape[1] // bk):
         xb = pp[:, kb * bk:(kb + 1) * bk].astype(jnp.float32)
-        x_q, scale = quantize_activations(xb)
+        x_q, scale = quant_rows(xb)
         out = cim_lib.cim_matmul_model(x_q, wp[kb * bk:(kb + 1) * bk], cfg)
         acc = acc + out * scale
     return acc

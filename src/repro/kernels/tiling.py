@@ -1,0 +1,123 @@
+"""Tiling resolution shared by the Pallas kernels.
+
+Each kernel entry point accepts ``block_m/block_n/block_k`` (``None`` =
+"consult the tuning table"), ``dim_order`` and an ``impl`` choice between
+the ``pallas_call`` grid and the direct plain-XLA lowering.  This module
+centralises the precedence rules:
+
+  explicit caller args  >  tuning-table entry  >  per-kernel defaults
+
+plus the one safety invariant the table must never violate: a table
+``block_k`` may only be used when it induces the *same k-partition* as
+the kernel default.  The k-partition determines the per-block activation
+quantisation scales and the accumulation grouping, i.e. the bits of the
+result.  Sharded and unsharded invocations of the same conv see
+different ``m`` and therefore different table keys, and the sharded
+trunk contract is bit-identity — so any tiling the table may hand out
+has to be bit-neutral.  block_m/block_n/dim_order/impl always are;
+block_k is checked here (and the autotuner only emits legal values, so
+this check is a belt-and-braces guard against hand-edited tables).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.tune import table as tune_table
+from repro.tune.table import Tiling
+
+__all__ = ["Tiling", "resolve_tiling", "resolve_direct", "k_partition",
+           "grid_and_axes", "conv_index_maps"]
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def k_partition(k: int, block_k: int, rows: int) -> tuple[tuple[int, int], ...]:
+    """The (start, end) k-ranges a kernel splits the contraction into.
+
+    Mirrors the kernels' clamp rule ``bk = min(block_k, round_up(k, rows))``
+    so two block_k values compare equal iff they group the contraction
+    identically (identical per-block quant scales and accumulation order).
+    """
+    bk = min(block_k, _round_up(k, rows))
+    gk = -(-k // bk)
+    return tuple((b * bk, min((b + 1) * bk, k)) for b in range(gk))
+
+
+def resolve_tiling(kernel: str, mode: str, dtype: str,
+                   m: int, k: int, n: int, *,
+                   block_m: int | None, block_n: int | None,
+                   block_k: int | None,
+                   defaults: tuple[int, int, int],
+                   rows: int) -> Tiling:
+    """Resolve the tiling for one kernel invocation.
+
+    Explicit (non-``None``) caller block sizes win outright and disable
+    the table lookup — a caller pinning any block size gets exactly what
+    it asked for (the block-invariance tests rely on this).  Otherwise
+    the tuning table is consulted, subject to the k-partition guard.
+    """
+    dm, dn, dk = defaults
+    t = None
+    if block_m is None and block_n is None and block_k is None:
+        t = tune_table.lookup(kernel, mode, dtype, int(m), int(k), int(n))
+        if t is not None and (k_partition(k, t.block_k, rows)
+                              != k_partition(k, dk, rows)):
+            t = None          # table entry would change the bits: ignore it
+    if t is None:
+        t = Tiling(block_m=dm, block_n=dn, block_k=dk)
+    return Tiling(
+        block_m=block_m if block_m is not None else t.block_m,
+        block_n=block_n if block_n is not None else t.block_n,
+        block_k=block_k if block_k is not None else t.block_k,
+        dim_order=t.dim_order, impl=t.impl)
+
+
+def resolve_direct(interpret: bool | None, direct: bool | None,
+                   tiling: Tiling | None = None) -> bool:
+    """Decide between the direct XLA lowering and ``pallas_call``.
+
+    ``direct`` is an explicit override; an explicit ``interpret`` flag
+    means the caller wants the real ``pallas_call`` grid (the kernel
+    tests exercise it this way); otherwise the table's ``impl`` and the
+    backend decide — off-TPU, ``pallas_call`` only runs in interpret
+    mode, so the direct lowering is the default fast path.
+    """
+    if direct is not None:
+        return bool(direct)
+    if interpret is not None:
+        return False
+    if tiling is not None and tiling.impl == "direct":
+        return True
+    return jax.default_backend() != "tpu"
+
+
+def grid_and_axes(gm: int, gn: int, gk: int,
+                  dim_order: str) -> tuple[tuple[int, int, int], int, int, int]:
+    """Grid tuple plus (m_axis, n_axis, k_axis) for a dim order.
+
+    ``"mnk"`` keeps K innermost (sequential accumulation over K for a
+    fixed output tile), ``"kmn"`` hoists K outermost (all output tiles
+    touched per K step).  Both visit each output tile's K blocks in
+    ascending order, so the accumulated bits are identical.
+    """
+    if dim_order == "mnk":
+        return (gm, gn, gk), 0, 1, 2
+    if dim_order == "kmn":
+        return (gk, gm, gn), 1, 2, 0
+    raise ValueError(f"unknown dim_order {dim_order!r}")
+
+
+def conv_index_maps(dim_order: str):
+    """BlockSpec index maps (x, w, out) for a (M,K)x(K,N) grid kernel."""
+    if dim_order == "mnk":
+        return (lambda i, j, kk: (i, kk),
+                lambda i, j, kk: (kk, j),
+                lambda i, j, kk: (i, j))
+    if dim_order == "kmn":
+        return (lambda kk, i, j: (i, kk),
+                lambda kk, i, j: (kk, j),
+                lambda kk, i, j: (i, j))
+    raise ValueError(f"unknown dim_order {dim_order!r}")

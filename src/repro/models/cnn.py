@@ -93,6 +93,15 @@ def apply_conv(params, x, spec: ReBranchSpec, stride: int = 1,
     # engines without epilogue support get None (handing them one would be
     # silently dropped); the layer applies the whole epilogue itself then
     fuse = epilogue is not None and eng.capabilities.epilogue
+    if has_branch and "conv" in eng.capabilities.fused_ops:
+        # one pass over the shared patch matrix computes trunk AND branch;
+        # the epilogue applies after the in-kernel branch add, exactly the
+        # act(BN(trunk + branch)) the unfused path reconstructs below
+        y = eng.fused_conv(spec.cim, x, rom["w_q"], rom["w_scale"],
+                           rom["C"], params["sram"]["core"], rom["U"],
+                           stride=stride, padding="SAME",
+                           epilogue=epilogue if fuse else None)
+        return y if fuse else engine_base.finish(y, epilogue)
     trunk_ep = (epilogue.without_act() if has_branch else epilogue) \
         if fuse else None
     y = eng.conv(spec.cim, x, rom["w_q"], rom["w_scale"],

@@ -1,0 +1,25 @@
+"""Per-geometry kernel autotuning.
+
+``repro.tune.table`` holds the checked-in tuning table the kernels
+consult at call time; ``repro.tune.autotune`` contains the search
+(imported lazily — it pulls in the kernels, which in turn import the
+table, so eager import here would be circular).
+
+Regenerate the table with ``python -m repro.tune``.
+"""
+
+from repro.tune import table
+from repro.tune.table import Tiling, disabled, load_table, lookup, overrides, save_table
+
+__all__ = ["table", "Tiling", "disabled", "load_table", "lookup",
+           "overrides", "save_table", "autotune"]
+
+
+def __getattr__(name):
+    if name == "autotune":
+        # importlib, not ``from repro.tune import autotune``: the from-
+        # import resolves the name through THIS __getattr__ first and
+        # would recurse before ever importing the submodule
+        import importlib
+        return importlib.import_module("repro.tune.autotune")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

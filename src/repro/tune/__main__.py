@@ -1,0 +1,74 @@
+"""(Re)generate or check the checked-in kernel tuning table.
+
+Generate (times candidate tilings per conv-site geometry, writes the
+winners as deterministic JSON next to ``repro/tune/table.py``):
+
+    PYTHONPATH=src python -m repro.tune \
+        [--models darknet19 resnet18 tiny_yolo] [--sizes 32] \
+        [--modes ideal] [--kernels trunk_conv cim_matmul] \
+        [--repeat 3] [--no-grid] [--full-sweep] [--out PATH]
+
+Check (static consistency of the checked-in table against the CURRENT
+site enumeration — the CI smoke step; exits nonzero on drift):
+
+    PYTHONPATH=src python -m repro.tune --check
+
+Off-TPU the ``pallas_call`` grid candidates run in interpret mode —
+slow to time and they never win there, so ``--no-grid`` (direct-lowering
+candidates only) is the practical CPU setting; the default still races
+the grid so a TPU run produces a real grid-vs-direct verdict.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.tune import autotune, table
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.tune",
+                                 description=__doc__.split("\n\n")[0])
+    ap.add_argument("--models", nargs="+",
+                    default=["darknet19", "resnet18", "tiny_yolo"],
+                    help="model families whose conv sites seed the table")
+    ap.add_argument("--sizes", nargs="+", type=int, default=[32],
+                    help="input resolutions to enumerate sites at")
+    ap.add_argument("--modes", nargs="+", default=["ideal"],
+                    choices=["ideal", "per_subarray", "bitserial"],
+                    help="CiM fidelity modes to tune")
+    ap.add_argument("--kernels", nargs="+",
+                    default=["trunk_conv", "cim_matmul"],
+                    choices=sorted(autotune.KERNEL_DEFAULTS),
+                    help="kernels to tune per site geometry")
+    ap.add_argument("--repeat", type=int, default=3,
+                    help="timing samples per candidate (best-of-k)")
+    ap.add_argument("--no-grid", action="store_true",
+                    help="skip pallas_call grid candidates (CPU setting)")
+    ap.add_argument("--full-sweep", action="store_true",
+                    help="sweep block_m/block_n for grid candidates too "
+                         "(default: impl/dim-order/block_k only)")
+    ap.add_argument("--out", default=None,
+                    help="output path (default: the checked-in table)")
+    ap.add_argument("--check", action="store_true",
+                    help="verify the checked-in table against the current "
+                         "site shapes instead of regenerating it")
+    args = ap.parse_args(argv)
+
+    if args.check:
+        return 0 if autotune.check_table(args.out) else 1
+
+    entries, meta = autotune.tune_table_for(
+        tuple(args.models), tuple(args.sizes), tuple(args.modes),
+        tuple(args.kernels), repeat=args.repeat, fast=not args.full_sweep,
+        grid=not args.no_grid, log=print)
+    out = args.out or table._DEFAULT_PATH
+    table.save_table(entries, out, meta=meta)
+    table.invalidate_cache()
+    print(f"wrote {len(entries)} entries to {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,372 @@
+"""Per-geometry kernel tiling search — the engine behind ``python -m repro.tune``.
+
+The kernels accept ``block_m/n/k`` + grid ``dim_order`` + an ``impl``
+choice (``pallas_call`` grid vs direct plain-XLA lowering) and consult
+the checked-in tuning table (:mod:`repro.tune.table`) whenever the
+caller leaves them unspecified.  This module fills that table: it
+enumerates the *legal* candidate tilings for a GEMM geometry, verifies
+each one bit-identical against the kernel-default path, times the
+survivors (best-of-``repeat`` wall clock), and records the winners.
+
+Legality is the load-bearing idea.  The fidelity modes fix the reduction
+structure — per-k-block activation quantisation scales and ascending-K
+accumulation — so a tiling that changes the k-partition changes the
+bits, not just the speed.  :func:`legal_block_ks` therefore only emits
+``block_k`` values that reproduce the default k-partition (same
+per-block scales, same accumulation grouping); ``block_m``/``block_n``/
+``dim_order``/``impl`` never touch the partition and are free axes.  On
+top of the static argument, every candidate is *empirically* checked:
+``np.array_equal`` against the default output, with mismatches dropped
+(and reported) rather than tabulated.
+
+Geometries come from the model families' conv site enumeration
+(``plan/sites.py`` wraps ``models.cnn.conv_site_shapes``): each conv
+site implies one patch-GEMM ``(M, K, N) = (N*OH*OW, KH*KW*C_in, C_out)``
+that the ``trunk_conv`` / ``cim_matmul`` kernels key on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+
+import jax
+import numpy as np
+
+from repro.kernels.tiling import k_partition
+from repro.tune import table as tune_table
+from repro.tune.table import Tiling
+
+# Per-kernel default tilings — must mirror the ``defaults=`` each kernel
+# passes to resolve_tiling (the k-partition baseline legality is defined
+# against).
+KERNEL_DEFAULTS = {
+    "cim_matmul": (128, 128, 512),
+    "trunk_conv": (128, 128, 512),
+    "rebranch_matmul": (128, 256, 512),
+}
+
+BLOCK_MS = (64, 128, 256)
+BLOCK_NS = (64, 128, 256)
+BLOCK_KS = (128, 256, 384, 512, 1024)
+ROWS = 128                      # CiMConfig.rows_per_subarray default
+
+
+@dataclasses.dataclass(frozen=True)
+class Geometry:
+    """One tunable kernel invocation shape (a table key plus the conv
+    metadata needed to rebuild representative inputs)."""
+
+    kernel: str                 # 'trunk_conv' | 'cim_matmul' | 'rebranch_matmul'
+    mode: str                   # CiM fidelity mode
+    dtype: str                  # activation dtype the kernel keys on
+    m: int
+    k: int
+    n: int
+    # trunk_conv only: (kernel size, c_in, c_out, input hw, stride)
+    conv: tuple | None = None
+
+    @property
+    def key(self) -> str:
+        return tune_table.key(self.kernel, self.mode, self.dtype,
+                              self.m, self.k, self.n)
+
+
+# ---------------------------------------------------------------------------
+# candidate enumeration
+# ---------------------------------------------------------------------------
+
+def legal_block_ks(k: int, rows: int = ROWS,
+                   default_bk: int = 512) -> list[int]:
+    """block_k values inducing the SAME k-partition as the default.
+
+    The kernels clamp ``bk = min(block_k, round_up(k, rows))``, so for
+    small contractions many block_k values collapse onto one partition;
+    for large ones only the default survives.  Either way every value
+    returned here is bit-neutral by construction (and re-checked
+    empirically by the tuner).
+    """
+    base = k_partition(k, default_bk, rows)
+    out, seen = [], set()
+    for bk in sorted(set(BLOCK_KS) | {default_bk}):
+        if bk % rows != 0 or k_partition(k, bk, rows) != base:
+            continue
+        eff = min(bk, -(-k // rows) * rows)   # the kernels' clamp rule
+        if eff in seen:
+            continue                          # same effective tiling
+        seen.add(eff)
+        out.append(bk)
+    return out
+
+
+def candidates(kernel: str, m: int, k: int, n: int, *,
+               rows: int = ROWS, fast: bool = False) -> list[Tiling]:
+    """Legal candidate tilings for one geometry, default-path first.
+
+    The direct (plain-XLA) lowering only consumes ``block_k``; the
+    ``pallas_call`` grid additionally sweeps ``block_m``/``block_n`` and
+    the grid dim order.  ``fast`` restricts the grid sweep to the
+    default block shape (the impl/dim-order comparison only) — what CI
+    and the checked-in table generation use.
+    """
+    dm, dn, dk = KERNEL_DEFAULTS[kernel]
+    bks = legal_block_ks(k, rows, dk)
+    out: list[Tiling] = []
+    for bk in bks:
+        out.append(Tiling(dm, dn, bk, "mnk", "direct"))
+    if fast:
+        grid_ms, grid_ns = (dm,), (dn,)
+    else:
+        grid_ms, grid_ns = BLOCK_MS, BLOCK_NS
+    for bm, bn, bk, order in itertools.product(grid_ms, grid_ns, bks,
+                                               tune_table.DIM_ORDERS):
+        out.append(Tiling(bm, bn, bk, order, "grid"))
+    # drop duplicates while keeping order (direct candidates first)
+    seen, uniq = set(), []
+    for t in out:
+        if t not in seen:
+            seen.add(t)
+            uniq.append(t)
+    return uniq
+
+
+# ---------------------------------------------------------------------------
+# geometry enumeration from the model families' conv sites
+# ---------------------------------------------------------------------------
+
+def conv_geometries(models: tuple[str, ...], sizes: tuple[int, ...],
+                    modes: tuple[str, ...],
+                    kernels: tuple[str, ...]) -> list[Geometry]:
+    """Deduplicated tunable geometries over the families' conv sites.
+
+    Each conv site becomes a ``trunk_conv`` geometry (float activations,
+    the deployment path) and/or a ``cim_matmul`` one (int8 patches, the
+    ``cim_conv`` fidelity path) keyed on the implied patch GEMM.
+    """
+    from repro.models import cnn            # deferred: heavy import
+
+    geoms: dict[str, Geometry] = {}
+    for name, size in itertools.product(models, sizes):
+        cfg = cnn.CNNConfig(name=name, input_size=size)
+        for site, kk, c_in, c_out, out_hw, stride in cnn.conv_site_shapes(cfg):
+            del site
+            m, kdim = out_hw * out_hw, kk * kk * c_in
+            if m == 0:
+                continue        # pooled below 1px at this input size:
+                                # the kernels short-circuit empty outputs
+
+            conv = (kk, c_in, c_out, out_hw * stride, stride)
+            for mode in modes:
+                if "trunk_conv" in kernels:
+                    g = Geometry("trunk_conv", mode, "float32",
+                                 m, kdim, c_out, conv=conv)
+                    geoms.setdefault(g.key, g)
+                if "cim_matmul" in kernels:
+                    g = Geometry("cim_matmul", mode, "int8",
+                                 m, kdim, c_out, conv=conv)
+                    geoms.setdefault(g.key, g)
+                if "rebranch_matmul" in kernels:
+                    g = Geometry("rebranch_matmul", mode, "float32",
+                                 m, kdim, c_out, conv=conv)
+                    geoms.setdefault(g.key, g)
+    return list(geoms.values())
+
+
+# ---------------------------------------------------------------------------
+# measurement
+# ---------------------------------------------------------------------------
+
+def _runner(geom: Geometry):
+    """A nullary callable running ``geom``'s kernel on deterministic
+    representative inputs; tiling comes from the ambient table context."""
+    import jax.numpy as jnp
+
+    from repro.core import cim as cim_lib
+    from repro.kernels.cim_matmul import cim_matmul_pallas
+    from repro.kernels.rebranch_conv import trunk_conv_pallas
+    from repro.kernels.rebranch_matmul import rebranch_matmul_pallas
+
+    cfg = cim_lib.CiMConfig(mode=geom.mode)
+    key = jax.random.PRNGKey(0)
+
+    if geom.kernel == "trunk_conv":
+        kk, c_in, c_out, hw, stride = geom.conv
+        x = jax.random.normal(key, (1, hw, hw, c_in), jnp.float32)
+        w_q = jax.random.randint(jax.random.fold_in(key, 1),
+                                 (kk, kk, c_in, c_out), -127, 128, jnp.int8)
+        w_scale = jnp.full((c_out,), 0.01, jnp.float32)
+
+        def run(interpret=None):
+            return trunk_conv_pallas(x, w_q, w_scale, cfg, stride=stride,
+                                     padding="SAME", interpret=interpret)
+        return run
+
+    if geom.kernel == "cim_matmul":
+        x_q = jax.random.randint(key, (geom.m, geom.k), -127, 128, jnp.int8)
+        w_q = jax.random.randint(jax.random.fold_in(key, 1),
+                                 (geom.k, geom.n), -127, 128, jnp.int8)
+
+        def run(interpret=None):
+            return cim_matmul_pallas(x_q, w_q, cfg, interpret=interpret)
+        return run
+
+    if geom.kernel == "rebranch_matmul":
+        c_c = max(1, geom.k // 4)
+        c_u = max(1, geom.n // 4)
+        ks = jax.random.split(key, 5)
+        x = jax.random.normal(ks[0], (geom.m, geom.k), jnp.float32)
+        w_q = jax.random.randint(ks[1], (geom.k, geom.n), -127, 128, jnp.int8)
+        w_scale = jnp.full((geom.n,), 0.01, jnp.float32)
+        c = jax.random.normal(ks[2], (geom.k, c_c)) / np.sqrt(geom.k)
+        core = jax.random.normal(ks[3], (c_c, c_u)) * 0.1
+        u = jax.random.normal(ks[4], (c_u, geom.n)) / np.sqrt(c_u)
+
+        def run(interpret=None):
+            return rebranch_matmul_pallas(x, w_q, w_scale, c, core, u, cfg,
+                                          interpret=interpret)
+        return run
+
+    raise ValueError(f"unknown tunable kernel {geom.kernel!r}")
+
+
+def _time_best(fn, repeat: int) -> tuple[np.ndarray, float]:
+    """(output, best-of-``repeat`` seconds); first call warms compilation."""
+    out = np.asarray(jax.block_until_ready(fn()))
+    best = float("inf")
+    for _ in range(max(1, repeat)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    geometry: Geometry
+    best: Tiling
+    best_s: float
+    default_s: float
+    n_candidates: int
+    n_mismatched: int           # candidates dropped by the bit check
+
+    @property
+    def speedup(self) -> float:
+        return self.default_s / max(self.best_s, 1e-12)
+
+
+def tune_geometry(geom: Geometry, *, repeat: int = 3, fast: bool = False,
+                  grid: bool = True) -> TuneResult:
+    """Search one geometry: verify + time every legal candidate.
+
+    ``grid=False`` skips the ``pallas_call`` candidates entirely —
+    off-TPU they run in interpret mode, where timing them is expensive
+    and they never win; the direct candidates still race each other.
+    """
+    run = _runner(geom)
+    with tune_table.disabled():
+        ref, default_s = _time_best(run, repeat)
+
+    cands = candidates(geom.kernel, geom.m, geom.k, geom.n, fast=fast)
+    if not grid:
+        cands = [c for c in cands if c.impl == "direct"]
+    best, best_s, mismatched = None, float("inf"), 0
+    for cand in cands:
+        with tune_table.overrides({geom.key: cand}):
+            # grid candidates need the explicit interpret flag off-TPU
+            # (resolve_direct would otherwise route them to the direct
+            # lowering and the measurement would be a lie)
+            interpret = (jax.default_backend() != "tpu"
+                         if cand.impl == "grid" else None)
+            out, s = _time_best(lambda: run(interpret=interpret), repeat)
+        if not np.array_equal(ref, out):
+            mismatched += 1     # not bit-identical: never tabulated
+            continue
+        if s < best_s:
+            best, best_s = cand, s
+    assert best is not None, f"no legal candidate for {geom.key}"
+    return TuneResult(geom, best, best_s, default_s,
+                      n_candidates=len(cands), n_mismatched=mismatched)
+
+
+# ---------------------------------------------------------------------------
+# whole-table generation + consistency check
+# ---------------------------------------------------------------------------
+
+def tune_table_for(models: tuple[str, ...], sizes: tuple[int, ...],
+                   modes: tuple[str, ...], kernels: tuple[str, ...], *,
+                   repeat: int = 3, fast: bool = False, grid: bool = True,
+                   log=None) -> tuple[dict[str, Tiling], dict]:
+    """(entries, meta) for the conv-site geometries of ``models``."""
+    geoms = conv_geometries(models, sizes, modes, kernels)
+    entries: dict[str, Tiling] = {}
+    for i, geom in enumerate(geoms):
+        res = tune_geometry(geom, repeat=repeat, fast=fast, grid=grid)
+        entries[geom.key] = res.best
+        if log is not None:
+            log(f"[{i + 1}/{len(geoms)}] {geom.key}: "
+                f"{res.best.impl}/{res.best.dim_order} "
+                f"bm={res.best.block_m} bn={res.best.block_n} "
+                f"bk={res.best.block_k}  "
+                f"{res.best_s * 1e3:.2f}ms vs default "
+                f"{res.default_s * 1e3:.2f}ms ({res.speedup:.2f}x, "
+                f"{res.n_candidates} cands, {res.n_mismatched} dropped)")
+    meta = {"models": sorted(models), "sizes": sorted(sizes),
+            "modes": sorted(modes), "kernels": sorted(kernels),
+            "backend": jax.default_backend(), "fast": bool(fast),
+            "grid": bool(grid), "repeat": int(repeat)}
+    return entries, meta
+
+
+def check_table(path: str | None = None, log=print) -> bool:
+    """Is the checked-in table consistent with the current site shapes?
+
+    Recomputes the expected key set from the table's own meta (models x
+    sizes x modes x kernels) and verifies (a) every expected geometry
+    has an entry, (b) no entry is stale (its key no longer enumerated),
+    (c) every entry passes the static legality rules (subarray-aligned
+    block_k reproducing the default k-partition).  Pure static checks —
+    no kernels run — so CI can gate on it cheaply.
+    """
+    import json
+    import os
+
+    p = path or tune_table._DEFAULT_PATH
+    if not os.path.exists(p):
+        log(f"tuning table missing: {p}")
+        return False
+    with open(p) as f:
+        doc = json.load(f)
+    meta = doc.get("meta", {})
+    entries = {k: Tiling.from_json(v)
+               for k, v in doc.get("entries", {}).items()}
+    required = ("models", "sizes", "modes", "kernels")
+    if not all(meta.get(f) for f in required):
+        log(f"table meta incomplete (need {required}): {sorted(meta)}")
+        return False
+
+    geoms = conv_geometries(tuple(meta["models"]),
+                            tuple(int(s) for s in meta["sizes"]),
+                            tuple(meta["modes"]), tuple(meta["kernels"]))
+    expected = {g.key: g for g in geoms}
+    ok = True
+    for key, g in sorted(expected.items()):
+        if key not in entries:
+            log(f"MISSING entry for current site geometry: {key}")
+            ok = False
+    for key, t in sorted(entries.items()):
+        if key not in expected:
+            log(f"STALE entry (geometry no longer enumerated): {key}")
+            ok = False
+            continue
+        g = expected[key]
+        dk = KERNEL_DEFAULTS[g.kernel][2]
+        if t.block_k % ROWS != 0 or (k_partition(g.k, t.block_k, ROWS)
+                                     != k_partition(g.k, dk, ROWS)):
+            log(f"ILLEGAL block_k={t.block_k} for {key} "
+                f"(changes the k-partition vs default {dk})")
+            ok = False
+    if ok:
+        log(f"tuning table OK: {len(entries)} entries cover "
+            f"{len(expected)} current site geometries")
+    return ok
