@@ -32,7 +32,7 @@ import sys
 
 # sections whose wall_us measures kernel execution (gate-worthy); the
 # rest are analytic tables where wall time is incidental
-GATED_SECTIONS = ("conv_kernel", "tuned_kernel")
+GATED_SECTIONS = ("conv_kernel", "tuned_kernel", "serve_load")
 
 
 def latest_baseline(root: str) -> str | None:
@@ -107,13 +107,18 @@ def main(argv=None) -> int:
                     help="also flag gated metrics more than RATIO times "
                          "FASTER than the baseline (stale baseline — check "
                          "in a fresh BENCH_*.json); informational, exit 0")
+    ap.add_argument("--require-baseline", action="store_true",
+                    help="fail (exit 1) when no baseline exists instead of "
+                         "passing vacuously — a missing/mis-globbed "
+                         "BENCH_*.json silently disables the CI gate "
+                         "otherwise")
     args = ap.parse_args(argv)
 
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     baseline_path = args.baseline or latest_baseline(root)
     if baseline_path is None:
         print("no BENCH_*.json baseline found — nothing to gate against")
-        return 0
+        return 1 if args.require_baseline else 0
 
     current = load_metrics(args.current)
     baseline = load_metrics(baseline_path)

@@ -1,0 +1,172 @@
+"""Serving load generator: N simulated users vs N sequential solo runs.
+
+Drives the `repro.serve` continuous batcher with a deterministic load
+(seeded prompts, fixed arrival schedule: user i submits after i
+``--stagger`` decode ticks) against one resident compiled cell, then
+replays the SAME prompts through the solo prefill+decode path the serve
+layer must stay bit-identical to.  Reports:
+
+  * aggregate decode throughput (tokens/s) for both paths and the
+    batched/solo speedup — the paper's "weights never move" premise as
+    a serving number: one ROM cell amortized across concurrent users;
+  * per-request wall latency p50/p99 (queueing + decode) under the
+    batched scheduler.
+
+Prints CSV rows (``name,us_per_call,derived``) and doubles as the
+``serve_load`` section of ``benchmarks.run --json`` — the decode-step
+rows carry real wall time, so the CI gate (`benchmarks.compare`)
+regression-checks the serve path like any kernel row.
+
+  PYTHONPATH=src python -m benchmarks.serve_load [--fast] [--users 8]
+      [--gen 16] [--slots 4] [--stagger 1]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _make_load(users: int, vocab: int, gen: int, seed: int = 0):
+    """Deterministic per-user prompts: varied lengths, seeded content."""
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, size=8 + (i % 5), dtype=np.int64)
+            for i in range(users)], [gen] * users
+
+
+def simulate(model_id: str = "gemma-2b-smoke", *, users: int = 8,
+             gen: int = 16, slots: int = 4, stagger: int = 1,
+             max_len: int = 64, seed: int = 0) -> dict:
+    """One batched run + one solo replay; returns the report dict."""
+    from repro import serve
+
+    model, _plan = serve.compile_entry(model_id)
+    params = model.init(jax.random.PRNGKey(seed))
+    prompts, gens = _make_load(users, model.cfg.vocab_size, gen, seed)
+
+    # -- batched: continuous batching over one slot pool ---------------
+    srv = serve.LMServer(model, params, n_slots=slots, max_len=max_len)
+    # warm the two executables (prefill buckets by prompt length)
+    for p in {p.size: p for p in prompts}.values():
+        warm = srv.batcher._prefill(
+            params, {"tokens": jnp.asarray(p[None])}, srv.pool.solo_cache())
+        jax.block_until_ready(warm[0])
+    warm_req = srv.submit(prompts[0], 2)
+    srv.drain(max_steps=8)
+    assert warm_req.done
+
+    step0 = srv.batcher.step_count
+    reqs = []
+    t0 = time.perf_counter()
+    tick = 0
+    while len(reqs) < users or not srv.batcher.idle:
+        # user i arrives after i*stagger ticks (deterministic schedule)
+        while len(reqs) < users and len(reqs) * stagger <= tick:
+            reqs.append(srv.submit(prompts[len(reqs)], gens[len(reqs)]))
+        srv.step()
+        tick += 1
+        if tick > 100_000:
+            raise RuntimeError("load loop stuck")
+    wall_batched = time.perf_counter() - t0
+    n_steps = srv.batcher.step_count - step0
+    total_tokens = sum(len(r.tokens) for r in reqs)
+    lats = sorted(r.latency_s for r in reqs)
+    p50 = lats[len(lats) // 2]
+    p99 = lats[min(len(lats) - 1, int(np.ceil(0.99 * len(lats))) - 1)]
+
+    # -- solo replay: the baseline the batched path must beat ----------
+    prefill = jax.jit(model.prefill)
+    decode = jax.jit(model.decode_step)
+    # warm the solo wrappers too (every prompt-length bucket + decode):
+    # both paths are timed with traces hot, so the speedup measures
+    # scheduling, not compile caches
+    for p in {p.size: p for p in prompts}.values():
+        c = model.init_cache(1, max_len, dtype=jnp.float32)
+        lg, c = prefill(params, {"tokens": jnp.asarray(p[None])}, c)
+        lg, c = decode(params, jnp.asarray([[0]], jnp.int32), c)
+        jax.block_until_ready(lg)
+    solo_tokens = []
+    t0 = time.perf_counter()
+    for p, g in zip(prompts, gens):
+        cache = model.init_cache(1, max_len, dtype=jnp.float32)
+        logits, cache = prefill(params, {"tokens": jnp.asarray(p[None])},
+                                cache)
+        tok = int(jnp.argmax(logits[0, -1]))
+        toks = [tok]
+        for _ in range(g - 1):
+            logits, cache = decode(
+                params, jnp.asarray([[tok]], jnp.int32), cache)
+            tok = int(jnp.argmax(logits[0, -1]))
+            toks.append(tok)
+        solo_tokens.append(toks)
+    wall_solo = time.perf_counter() - t0
+
+    bitwise = all(list(r.tokens) == s for r, s in zip(reqs, solo_tokens))
+    return {
+        "model_id": model_id, "users": users, "gen": gen, "slots": slots,
+        "total_tokens": total_tokens, "decode_steps": n_steps,
+        "wall_batched_s": wall_batched, "wall_solo_s": wall_solo,
+        "tokens_s_batched": total_tokens / wall_batched,
+        "tokens_s_solo": total_tokens / wall_solo,
+        "speedup": wall_solo / wall_batched,
+        "p50_ms": p50 * 1e3, "p99_ms": p99 * 1e3,
+        "bit_identical": bitwise,
+    }
+
+
+def report_lines(r: dict) -> list[str]:
+    """CSV rows for benchmarks.run; wall_us rows feed the CI gate."""
+    us_per_tok_b = r["wall_batched_s"] * 1e6 / r["total_tokens"]
+    us_per_tok_s = r["wall_solo_s"] * 1e6 / r["total_tokens"]
+    n = f"{r['users']}u{r['slots']}s"
+    return [
+        f"serve_us_per_token_batched_{n},{us_per_tok_b:.0f},"
+        f"tokens_s={r['tokens_s_batched']:.1f} speedup="
+        f"{r['speedup']:.2f}x bit_identical={r['bit_identical']}",
+        f"serve_us_per_token_solo_{n},{us_per_tok_s:.0f},"
+        f"tokens_s={r['tokens_s_solo']:.1f}",
+        f"serve_latency_{n},0,p50_ms={r['p50_ms']:.1f} "
+        f"p99_ms={r['p99_ms']:.1f} decode_steps={r['decode_steps']}",
+    ]
+
+
+def run() -> list[str]:
+    """benchmarks.run section: the acceptance geometry (8 users over a
+    4-slot pool) on the smoke LM.  bit_identical rides along in the
+    derived column so a parity break is visible in every BENCH_*.json."""
+    return report_lines(simulate(users=8, gen=16, slots=4))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="small load (CI smoke): 4 users, 6 tokens")
+    ap.add_argument("--users", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--stagger", type=int, default=1)
+    ap.add_argument("--model", default="gemma-2b-smoke")
+    args = ap.parse_args(argv)
+    if args.fast:
+        args.users, args.gen = min(args.users, 4), min(args.gen, 6)
+    r = simulate(args.model, users=args.users, gen=args.gen,
+                 slots=args.slots, stagger=args.stagger)
+    print("name,us_per_call,derived")
+    for line in report_lines(r):
+        print(line)
+    if not r["bit_identical"]:
+        print("FAIL: batched serve output diverged from the solo path")
+        return 1
+    if r["speedup"] <= 1.0:
+        print(f"WARN: batched serving not faster than solo "
+              f"({r['speedup']:.2f}x) at users={args.users}")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

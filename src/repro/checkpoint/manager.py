@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 import threading
 
@@ -71,18 +72,32 @@ def save(ckpt_dir: str, step: int, trainable, opt_state, params_full,
 
 def _gc(ckpt_dir: str, keep: int):
     steps = sorted(latest_steps(ckpt_dir))
-    for s in steps[:-keep]:
+    # keep <= 0 means keep NOTHING: steps[:-0] slices to [] and would
+    # silently keep everything instead
+    drop = steps if keep <= 0 else steps[:-keep]
+    for s in drop:
         shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
                       ignore_errors=True)
 
 
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
 def latest_steps(ckpt_dir: str) -> list[int]:
+    """Step numbers of the completed checkpoints under ``ckpt_dir``.
+
+    Only exact ``step_<int>`` names count: stray directories (an
+    interrupted write renamed by hand, ``step_5_backup``, editor
+    droppings) are skipped instead of crashing every restore/gc with a
+    ``ValueError`` for the whole directory.
+    """
     if not os.path.isdir(ckpt_dir):
         return []
     out = []
     for name in os.listdir(ckpt_dir):
-        if name.startswith("step_") and not name.endswith(".tmp"):
-            out.append(int(name.split("_")[1]))
+        m = _STEP_RE.match(name)
+        if m:
+            out.append(int(m.group(1)))
     return sorted(out)
 
 

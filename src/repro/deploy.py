@@ -133,17 +133,50 @@ class CompiledModel:
 
     def prefill(self, params, batch, cache):
         self._lm_only("prefill")
+        tokens = batch.get("tokens", batch.get("embeds"))
+        if tokens is not None:
+            self._check_cache("prefill", tokens, cache)
         with self._scope():
             return api.prefill(params, batch, self.cfg, cache)
 
     def decode_step(self, params, tokens, cache):
         self._lm_only("decode_step")
+        self._check_cache("decode_step", tokens, cache)
         with self._scope():
             return api.decode_step(params, tokens, self.cfg, cache)
 
     def init_cache(self, batch: int, max_len: int, dtype=None):
         self._lm_only("init_cache")
         return api.init_cache(self.cfg, batch, max_len, dtype)
+
+    def _check_cache(self, what: str, tokens, cache):
+        """Catch cache/batch geometry mismatches at the model surface.
+
+        A cache built for a different batch (or a prompt longer than the
+        cache horizon) used to fail DEEP inside the model with an opaque
+        XLA broadcast/scatter shape error; shapes are static, so the
+        check is free at trace time and names both geometries.
+        """
+        n_batch, seq = tokens.shape[0], tokens.shape[1]
+        cache_batch, horizon = api.cache_geometry(self.cfg, cache)
+        if cache_batch != n_batch:
+            raise ValueError(
+                f"{what}: cache was built for batch={cache_batch} but "
+                f"tokens have batch={n_batch} (tokens {tokens.shape} vs "
+                f"cache rows {cache_batch}); build the cache with "
+                f"init_cache(batch={n_batch}, max_len=...) or slice the "
+                f"batch to match")
+        if what == "decode_step" and seq != 1:
+            raise ValueError(
+                f"decode_step consumes ONE token per sequence, got "
+                f"tokens {tokens.shape} (seq={seq}); use prefill() for "
+                f"multi-token inputs")
+        if (what == "prefill" and horizon is not None
+                and self.cfg.sliding_window == 0 and seq > horizon):
+            raise ValueError(
+                f"prefill: prompt length {seq} exceeds the cache horizon "
+                f"{horizon} (full-attention cache holds max_len tokens); "
+                f"build the cache with init_cache(batch, max_len>={seq})")
 
     def _lm_only(self, what: str):
         if self._is_cnn:

@@ -58,3 +58,28 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
     import jax.numpy as jnp
     dtype = dtype or jnp.bfloat16
     return _mod(cfg).init_cache(cfg, batch, max_len, dtype)
+
+
+def cache_geometry(cfg: ArchConfig, cache) -> tuple[int, int | None]:
+    """(batch, horizon) a serve cache was built for.
+
+    Works on the cache TREE (shapes only, jit-tracer safe).  Every cache
+    leaf carries batch at axis 0 — axis 1 under scan-stacked layers,
+    where leaves gain a leading L dim.  The horizon is the largest K/V
+    sequence axis across layers (full-attention layers hold ``max_len``;
+    SWA layers only their window); ``None`` for attention-free (O(1)
+    state) families, whose horizon is unbounded.
+    """
+    import jax
+    axis = 1 if cfg.scan_layers else 0
+    leaves = jax.tree.leaves(cache)
+    if not leaves:
+        raise ValueError("empty cache tree")
+    batch = leaves[0].shape[axis]
+    if cfg.is_attention_free:
+        return batch, None
+    # K/V leaves are [(L,) B, S, KV, Dh] — the only rank-(4+axis) leaves
+    # (ssm state inside hybrids is rank 3, lengths rank 1+axis)
+    kv = [leaf.shape[1 + axis] for leaf in leaves
+          if leaf.ndim == 4 + axis]
+    return batch, max(kv)

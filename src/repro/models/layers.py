@@ -224,11 +224,17 @@ def apply_attention(params, x, cfg: ArchConfig, layer_idx: int,
         assert cache is not None and s == 1
         length = cache["length"]                               # [B]
         s_max = cache["k"].shape[1]
-        slot = length[0] % s_max          # ring buffer for SWA layers
-        k_cache = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        # Per-ROW ring slot: under continuous batching the rows of one
+        # cache hold different sequences at different lengths, so each
+        # row writes its own slot (a shared ``length[0]`` slot corrupts
+        # every row whose length differs from row 0's — the new KV lands
+        # inside an already-valid slot and the true slot stays stale).
+        slot = length % s_max             # [B] ring buffer for SWA layers
+        rows = jnp.arange(k.shape[0])
+        k_cache = cache["k"].at[rows, slot].set(
+            k[:, 0].astype(cache["k"].dtype))
+        v_cache = cache["v"].at[rows, slot].set(
+            v[:, 0].astype(cache["v"].dtype))
         valid = jnp.minimum(length + 1, s_max)
         out = _decode_attention(q, k_cache, v_cache, valid)
         new_cache = {"k": k_cache, "v": v_cache, "length": length + 1}

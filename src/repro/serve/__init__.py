@@ -1,0 +1,29 @@
+"""Serving runtime: continuous batching over one resident ROM cell.
+
+The paper's premise is that ROM-CiM weights never move — so a compiled
+cell should amortize across as many concurrent users as the scheduler
+can feed it.  This package owns requests on top of
+``repro.deploy.compile_model``:
+
+  * :mod:`repro.serve.registry`  — model-id -> (config, plan, engine,
+    tune) entries, compiled lazily into ONE resident
+    :class:`~repro.deploy.CompiledModel` per id (the exo
+    ``model_base_shards`` shape: ids are data, deployment is a lookup).
+  * :mod:`repro.serve.pool`      — slot-based KV-cache pool built on
+    ``CompiledModel.init_cache``, sized from the
+    :class:`~repro.plan.PlacementPlan`'s SRAM residency stats (weights
+    already resident in SRAM shrink the activation/KV budget).
+  * :mod:`repro.serve.scheduler` — admission queue + continuous-batching
+    scheduler: solo prefills join the batch at decode-step boundaries,
+    finished requests retire without draining the batch, and every
+    request's output is bit-identical to a solo prefill+decode run.
+  * :mod:`repro.serve.server`    — the async front door shared by LM
+    decode serving and ``cnn.CNNConfig`` forward-only serving:
+    ``serve.load(model_id)`` returns a server with ``submit``.
+"""
+
+from repro.serve.pool import SlotPool, suggest_slots      # noqa: F401
+from repro.serve.registry import (ModelEntry, compile_entry,  # noqa: F401
+                                  register, registered_ids, resolve)
+from repro.serve.scheduler import ContinuousBatcher, Request  # noqa: F401
+from repro.serve.server import CNNServer, LMServer, load  # noqa: F401

@@ -1,0 +1,112 @@
+"""Slot-based KV-cache pool: one resident cache, rows owned by requests.
+
+One ``CompiledModel.init_cache(n_slots, max_len)`` tree is allocated up
+front; each concurrent request owns one batch row ("slot") for its
+lifetime.  Admission copies a solo-prefilled (batch=1) cache into the
+slot row — bitwise, no rescale — so a request's decode continues from
+exactly the state the solo path would hold.  Retirement just returns
+the slot: stale rows are dead weight until the next adoption overwrites
+them (decode may keep writing garbage into free rows; nothing reads it
+because every row's validity mask follows its own ``length``).
+
+Pool sizing comes from the :class:`~repro.plan.PlacementPlan`'s SRAM
+residency stats: the branch cores and any SRAM-resident sites already
+occupy on-die SRAM, and the KV slots live in what remains of the
+activation budget (:func:`suggest_slots`).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+
+
+def _batch_axis(cfg) -> int:
+    """Batch axis of every cache leaf: 1 under scan-stacked layers
+    (leaves carry a leading L dim), 0 otherwise."""
+    return 1 if getattr(cfg, "scan_layers", False) else 0
+
+
+class SlotPool:
+    """N cache rows + a free list; adoption and release are O(1)."""
+
+    def __init__(self, model, n_slots: int, max_len: int,
+                 dtype=jnp.float32):
+        if n_slots < 1:
+            raise ValueError(f"need at least one slot, got {n_slots}")
+        self.model = model
+        self.n_slots = int(n_slots)
+        self.max_len = int(max_len)
+        self.dtype = dtype
+        self._axis = _batch_axis(model.cfg)
+        self.cache = model.init_cache(n_slots, max_len, dtype=dtype)
+        self._free = list(range(n_slots))[::-1]     # pop() -> slot 0 first
+
+    # -- bookkeeping ----------------------------------------------------
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    @property
+    def occupancy(self) -> int:
+        return self.n_slots - len(self._free)
+
+    def alloc(self) -> int | None:
+        return self._free.pop() if self._free else None
+
+    def release(self, slot: int) -> None:
+        if not (0 <= slot < self.n_slots):
+            raise ValueError(f"slot {slot} outside pool of {self.n_slots}")
+        if slot in self._free:
+            raise ValueError(f"slot {slot} double-released")
+        self._free.append(slot)
+
+    # -- cache row transfer ---------------------------------------------
+    def adopt(self, slot: int, solo_cache) -> None:
+        """Copy a batch=1 cache into ``slot``'s row, leaf by leaf."""
+        axis = self._axis
+
+        def put(pool_leaf, solo_leaf):
+            row = jax.lax.index_in_dim(solo_leaf, 0, axis, keepdims=False)
+            return jax.lax.dynamic_update_index_in_dim(
+                pool_leaf, row.astype(pool_leaf.dtype), slot, axis)
+
+        self.cache = jax.tree.map(put, self.cache, solo_cache)
+
+    def solo_cache(self):
+        """A fresh batch=1 cache with this pool's geometry (for the
+        admission prefill; same max_len so adopted rows line up)."""
+        return self.model.init_cache(1, self.max_len, dtype=self.dtype)
+
+
+def cache_bytes_per_slot(model, max_len: int, dtype=jnp.float32) -> int:
+    """Bytes one slot (batch row) of the KV cache occupies — computed
+    from ``init_cache`` shapes via eval_shape, no allocation."""
+    cfg = model.cfg
+    shapes = jax.eval_shape(
+        lambda: api.init_cache(cfg, 1, max_len, dtype))
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree.leaves(shapes))
+
+
+def suggest_slots(model, plan, max_len: int, *,
+                  sram_capacity_bytes: int = 64 << 20,
+                  dtype=jnp.float32, max_slots: int = 64) -> int:
+    """KV slots that fit beside the plan's SRAM-resident weights.
+
+    The placement plan already commits SRAM to the ReBranch cores and to
+    any full-SRAM sites (``PlanStats.branch_bits + sram_bits``); the KV
+    pool lives in the remainder of the die's SRAM capacity.  Always at
+    least 1 (a pool that can't hold one request isn't a pool), at most
+    ``max_slots`` (scheduler batches past ~64 rows want sharding, not a
+    wider pool).
+    """
+    per_slot = cache_bytes_per_slot(model, max_len, dtype)
+    resident = 0
+    if plan is not None:
+        stats = plan.stats(model.cfg)
+        resident = (stats.branch_bits + stats.sram_bits) // 8
+    budget = max(0, sram_capacity_bytes - resident)
+    return max(1, min(max_slots, budget // per_slot))

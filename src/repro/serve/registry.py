@@ -1,0 +1,119 @@
+"""Model registry: model-id -> (config, plan, engine, tune) -> one cell.
+
+The serving analogue of exo's ``model_base_shards`` map (SNIPPETS.md §1):
+a model id is data, and everything needed to deploy it — the config
+factory, the placement plan, the engine and the tuning policy — hangs
+off that id.  ``compile_entry`` resolves an id into a
+:class:`~repro.deploy.CompiledModel` exactly once per process: the ROM
+trunk is immutable and never moves, so the compiled cell is a resident
+singleton that every server/scheduler for that id shares.
+
+Resolution is strict, like ``repro.engine``: unknown ids raise with the
+registered set, so a typo'd model id fails at the front door instead of
+deploying a default config.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable
+
+from repro import configs, deploy
+from repro import plan as plan_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelEntry:
+    """Everything needed to deploy one model id.
+
+    config: zero-arg factory returning the config (ArchConfig or
+        cnn.CNNConfig).  A factory, not an instance, so registering the
+        whole zoo costs nothing until an id is actually served.
+    plan: optional ``cfg -> PlacementPlan`` factory.  ``None`` means
+        "solve the minimum-area design point" when the family has an
+        enumerable site tree (the YOLoC all-ROM+branch deployment), or
+        no plan for families outside the placement subsystem.
+    engine / tune: forwarded to ``deploy.compile_model``.
+    """
+    model_id: str
+    config: Callable[[], Any]
+    plan: Callable[[Any], Any] | None = None
+    engine: str | None = None
+    tune: bool | None = None
+
+
+_REGISTRY: dict[str, ModelEntry] = {}
+_COMPILED: dict[str, tuple] = {}          # id -> (CompiledModel, plan)
+_LOCK = threading.Lock()
+
+
+def register(entry: ModelEntry, *, override: bool = False) -> ModelEntry:
+    with _LOCK:
+        if entry.model_id in _REGISTRY and not override:
+            raise ValueError(
+                f"model id {entry.model_id!r} already registered; pass "
+                f"override=True to replace it")
+        _REGISTRY[entry.model_id] = entry
+        _COMPILED.pop(entry.model_id, None)   # stale cell, if any
+    return entry
+
+
+def registered_ids() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def resolve(model_id: str) -> ModelEntry:
+    try:
+        return _REGISTRY[model_id]
+    except KeyError:
+        raise KeyError(
+            f"unknown model id {model_id!r}; registered: "
+            f"{registered_ids()}") from None
+
+
+def compile_entry(model_id: str):
+    """The resident cell for ``model_id``: (CompiledModel, plan).
+
+    Compiled at most once per process — repeated loads (more servers,
+    more schedulers) share the same deployed cell, which is the whole
+    point of ROM residency.
+    """
+    with _LOCK:
+        if model_id in _COMPILED:
+            return _COMPILED[model_id]
+    entry = resolve(model_id)
+    cfg = entry.config()
+    if entry.plan is not None:
+        plan = entry.plan(cfg)
+    else:
+        # default: the minimum-area YOLoC design point, when the family
+        # has an enumerable site tree (plan stats then size the KV pool)
+        plan = (plan_lib.solve(cfg, None, engine=entry.engine)
+                if plan_lib.try_site_tree(cfg) is not None else None)
+    model = deploy.compile_model(
+        cfg, plan=plan, engine=None if plan is not None else entry.engine,
+        tune=entry.tune)
+    with _LOCK:
+        # lost race: keep the first compile (the resident cell)
+        return _COMPILED.setdefault(model_id, (model, plan))
+
+
+def _builtin_entries():
+    """The zoo: every smoke LM config plus the paper's CNN trunks."""
+    out = []
+    for arch in configs.ALL_ARCHS:
+        out.append(ModelEntry(
+            model_id=arch.replace("_", "-") + "-smoke",
+            config=(lambda a=arch: configs.get_smoke(a))))
+    from repro.models import cnn
+    for name in ("vgg8", "resnet18", "darknet19", "tiny_yolo"):
+        out.append(ModelEntry(
+            model_id=name.replace("_", "-") + "-32",
+            config=(lambda n=name: cnn.CNNConfig(name=n, input_size=32))))
+    return out
+
+
+for _e in _builtin_entries():
+    register(_e)
+del _e

@@ -1,0 +1,178 @@
+"""Continuous batching: interleave prefill and decode over one cell.
+
+The scheduler owns requests.  Life of a request:
+
+  submit -> admission queue (FIFO) -> [slot free?] solo prefill
+  (batch=1, bit-identical to the standalone path) -> KV row adopted
+  into the pool -> joins the batched ``decode_step`` at the next step
+  boundary -> retires when done (max_new_tokens or EOS) -> slot freed,
+  the rest of the batch keeps decoding.
+
+Invariants (tested in tests/test_serve.py):
+  * occupancy never exceeds the pool size;
+  * admission is FIFO and work-conserving — a request waits only while
+    every slot is held by an unfinished request (no starvation);
+  * each request's tokens are bit-identical to a solo
+    ``prefill`` + ``decode_step`` run of the same prompt, because the
+    per-row attention cache makes batched decode row-independent.
+
+Decoding is greedy (argmax) — deterministic, which is what makes the
+bit-parity invariant testable end to end.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One user request plus its scheduling trace."""
+    rid: int
+    prompt: np.ndarray                    # [S] int32 token ids
+    max_new_tokens: int
+    eos_id: int | None = None
+    # filled in by the scheduler:
+    tokens: list = dataclasses.field(default_factory=list)
+    slot: int | None = None
+    submit_step: int = -1                 # scheduler tick at submit
+    admit_step: int = -1                  # tick the prefill ran
+    finish_step: int = -1                 # tick the last token landed
+    submit_s: float = 0.0                 # wall clock, for latency stats
+    finish_s: float = 0.0
+
+    @property
+    def done(self) -> bool:
+        return self.finish_step >= 0
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_s - self.submit_s
+
+
+class ContinuousBatcher:
+    """Admission queue + decode loop over one model and one slot pool."""
+
+    def __init__(self, model, params, pool):
+        self.model = model
+        self.params = params
+        self.pool = pool
+        self._prefill = jax.jit(model.prefill)
+        # donate the cache: the pool always replaces it with the returned
+        # tree, so decode updates the KV rows in place instead of copying
+        # the whole pool every step
+        self._decode = jax.jit(model.decode_step, donate_argnums=(2,))
+        self._queue: collections.deque[Request] = collections.deque()
+        self._active: dict[int, Request] = {}       # slot -> request
+        # the token column fed to decode_step: one row per slot; free
+        # rows carry 0 (their output is masked by never being read)
+        self._tok = np.zeros((pool.n_slots, 1), np.int32)
+        self._next_rid = 0
+        self.step_count = 0
+
+    # -- front door ------------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int,
+               eos_id: int | None = None) -> Request:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, "
+                             f"got {max_new_tokens}")
+        total = prompt.size + max_new_tokens
+        if total > self.pool.max_len:
+            raise ValueError(
+                f"request needs {total} cache slots "
+                f"(prompt {prompt.size} + {max_new_tokens} new) but the "
+                f"pool was sized for max_len={self.pool.max_len}")
+        req = Request(rid=self._next_rid, prompt=prompt,
+                      max_new_tokens=max_new_tokens, eos_id=eos_id)
+        req.submit_step = self.step_count
+        req.submit_s = time.perf_counter()
+        self._next_rid += 1
+        self._queue.append(req)
+        return req
+
+    # -- scheduler state -------------------------------------------------
+    @property
+    def queued(self) -> int:
+        return len(self._queue)
+
+    @property
+    def active(self) -> int:
+        return len(self._active)
+
+    @property
+    def idle(self) -> bool:
+        return not self._queue and not self._active
+
+    # -- the loop ----------------------------------------------------------
+    def _finish(self, req: Request) -> None:
+        req.finish_step = self.step_count
+        req.finish_s = time.perf_counter()
+        self.pool.release(req.slot)
+        del self._active[req.slot]
+
+    def _maybe_retire(self, req: Request) -> None:
+        hit_eos = (req.eos_id is not None and req.tokens
+                   and req.tokens[-1] == req.eos_id)
+        if len(req.tokens) >= req.max_new_tokens or hit_eos:
+            self._finish(req)
+
+    def _admit(self) -> None:
+        """FIFO admission into free slots; the prefill runs solo
+        (batch=1) so its bits match the standalone path exactly, and the
+        row joins the batch at the next decode boundary."""
+        while self._queue and self.pool.free_slots:
+            req = self._queue.popleft()
+            slot = self.pool.alloc()
+            solo = self.pool.solo_cache()
+            logits, solo = self._prefill(
+                self.params, {"tokens": jnp.asarray(req.prompt[None])},
+                solo)
+            self.pool.adopt(slot, solo)
+            first = int(jnp.argmax(logits[0, -1]))
+            req.slot = slot
+            req.admit_step = self.step_count
+            req.tokens.append(first)
+            self._tok[slot, 0] = first
+            self._active[slot] = req
+            self._maybe_retire(req)       # 1-token requests finish here
+
+    def step(self) -> bool:
+        """One scheduler tick: retire / admit at the boundary, then one
+        batched decode step.  Returns False once idle."""
+        self._admit()
+        if not self._active:
+            return not self.idle
+        logits, cache = self._decode(
+            self.params, jnp.asarray(self._tok), self.pool.cache)
+        self.pool.cache = cache
+        nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1), np.int32)
+        self.step_count += 1
+        for slot, req in list(self._active.items()):
+            req.tokens.append(int(nxt[slot]))
+            self._tok[slot, 0] = nxt[slot]
+            self._maybe_retire(req)
+        return not self.idle
+
+    def drain(self, max_steps: int | None = None) -> int:
+        """Run until every submitted request finished; returns the
+        number of decode steps taken.  ``max_steps`` guards tests
+        against scheduler bugs (raises instead of spinning)."""
+        start = self.step_count
+        while not self.idle:
+            if max_steps is not None and \
+                    self.step_count - start >= max_steps:
+                raise RuntimeError(
+                    f"drain() exceeded {max_steps} steps with "
+                    f"{self.queued} queued / {self.active} active — "
+                    f"scheduler stuck?")
+            self.step()
+        return self.step_count - start

@@ -1,0 +1,130 @@
+"""The front door: ``serve.load(model_id)`` -> a server with submit().
+
+One entry point covers both serve surfaces:
+
+  * LM configs get :class:`LMServer` — the continuous batcher behind a
+    synchronous ``submit``/``drain`` pair plus an async ``generate``
+    coroutine (concurrent callers share the batch; the decode loop is
+    pumped cooperatively, one tick per waiter round).
+  * CNN configs get :class:`CNNServer` — forward-only micro-batching:
+    submitted images ride one fixed-geometry jit'd forward in pool-sized
+    chunks (one compile, any request count).
+
+Both are views over the SAME resident cell per model id (the registry
+compiles at most once per process): serving more users never re-stages
+the ROM trunk.
+"""
+
+from __future__ import annotations
+
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import cnn
+from repro.serve import registry
+from repro.serve.pool import SlotPool, suggest_slots
+from repro.serve.scheduler import ContinuousBatcher
+
+
+class LMServer:
+    """Continuous-batching decode serving for one resident LM cell."""
+
+    def __init__(self, model, params, *, n_slots: int, max_len: int,
+                 dtype=jnp.float32):
+        self.model = model
+        self.params = params
+        self.pool = SlotPool(model, n_slots, max_len, dtype=dtype)
+        self.batcher = ContinuousBatcher(model, params, self.pool)
+
+    # -- sync surface ---------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int, eos_id=None):
+        return self.batcher.submit(prompt, max_new_tokens, eos_id=eos_id)
+
+    def step(self) -> bool:
+        return self.batcher.step()
+
+    def drain(self, max_steps: int | None = None) -> int:
+        return self.batcher.drain(max_steps)
+
+    # -- async surface --------------------------------------------------
+    async def generate(self, prompt, max_new_tokens: int,
+                       eos_id=None) -> list[int]:
+        """Submit and await one request; concurrent callers batch.
+
+        Cooperative pump: each waiter advances the shared scheduler one
+        tick per event-loop round, so N concurrent ``generate`` calls
+        decode as one batch instead of N solo loops.
+        """
+        req = self.submit(prompt, max_new_tokens, eos_id=eos_id)
+        while not req.done:
+            self.batcher.step()
+            await asyncio.sleep(0)
+        return list(req.tokens)
+
+
+class CNNServer:
+    """Forward-only serving for CNN configs: one jit'd fixed-batch cell.
+
+    Requests are padded into ``n_slots``-row chunks so every call hits
+    the same compiled executable; pad rows are sliced off the output
+    (inference BN uses frozen statistics, so rows are independent and
+    padding never changes a real row's result).
+    """
+
+    def __init__(self, model, params, *, n_slots: int):
+        if n_slots < 1:
+            raise ValueError(f"need at least one slot, got {n_slots}")
+        self.model = model
+        self.params = params
+        self.n_slots = int(n_slots)
+        self._forward = jax.jit(model.forward)
+
+    def submit(self, images) -> np.ndarray:
+        """images: [B, H, W, C] -> model outputs for all B rows."""
+        images = jnp.asarray(images)
+        if images.ndim == 3:
+            images = images[None]
+        outs = []
+        for lo in range(0, images.shape[0], self.n_slots):
+            chunk = images[lo:lo + self.n_slots]
+            pad = self.n_slots - chunk.shape[0]
+            if pad:
+                chunk = jnp.concatenate(
+                    [chunk, jnp.zeros((pad, *chunk.shape[1:]),
+                                      chunk.dtype)], 0)
+            out = self._forward(self.params, chunk)
+            outs.append(np.asarray(out[:self.n_slots - pad]
+                                   if pad else out))
+        return np.concatenate(outs, 0)
+
+    async def generate(self, image) -> np.ndarray:
+        """Async single-image front door (symmetry with LMServer)."""
+        await asyncio.sleep(0)
+        return self.submit(image[None] if np.asarray(image).ndim == 3
+                           else image)[0]
+
+
+def load(model_id: str, *, params=None, key=None, n_slots=None,
+         max_len: int = 128, dtype=jnp.float32,
+         sram_capacity_bytes: int = 64 << 20):
+    """One front door for LM decode and CNN forward serving.
+
+    Resolves ``model_id`` through the registry (the cell is compiled at
+    most once per process), initialises params unless given, and sizes
+    the KV pool from the entry's placement plan when ``n_slots`` is not
+    forced.
+    """
+    model, plan = registry.compile_entry(model_id)
+    if params is None:
+        params = model.init(key if key is not None
+                            else jax.random.PRNGKey(0))
+    if isinstance(model.cfg, cnn.CNNConfig):
+        return CNNServer(model, params, n_slots=n_slots or 8)
+    if n_slots is None:
+        n_slots = suggest_slots(model, plan, max_len, dtype=dtype,
+                                sram_capacity_bytes=sram_capacity_bytes)
+    return LMServer(model, params, n_slots=n_slots, max_len=max_len,
+                    dtype=dtype)

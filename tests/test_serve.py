@@ -1,0 +1,376 @@
+"""Serving runtime: registry, slot pool, continuous-batching scheduler.
+
+The load-bearing invariants (ISSUE 7):
+  * batch occupancy never exceeds the pool size;
+  * admission is FIFO and no request starves — every submitted request
+    finishes within a bounded number of scheduler ticks;
+  * each request's serve output is BIT-identical to a solo
+    prefill+decode_step run of the same prompt (continuous batching
+    changes scheduling, never results);
+  * cache/batch geometry mismatches fail at the CompiledModel surface
+    with a message naming both shapes, not deep inside XLA.
+"""
+
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs, deploy, serve
+from repro.models import api, cnn
+from repro.serve.pool import SlotPool, cache_bytes_per_slot
+from repro.serve.scheduler import ContinuousBatcher
+
+MODEL_ID = "gemma-2b-smoke"
+MAX_LEN = 48
+
+
+@pytest.fixture(scope="module")
+def cell():
+    model, plan = serve.compile_entry(MODEL_ID)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, plan, params
+
+
+def _prompts(n, vocab, seed=0):
+    rng = np.random.default_rng(seed)
+    # varied lengths: exercises per-row cache state under batching
+    return [rng.integers(0, vocab, size=6 + (i % 4)) for i in range(n)]
+
+
+def _solo_decode(model, params, prompt, n_new):
+    """The reference path: batch=1 prefill + decode loop."""
+    cache = model.init_cache(1, MAX_LEN, dtype=jnp.float32)
+    logits, cache = jax.jit(model.prefill)(
+        params, {"tokens": jnp.asarray(np.asarray(prompt)[None])}, cache)
+    tok = int(jnp.argmax(logits[0, -1]))
+    out = [tok]
+    for _ in range(n_new - 1):
+        logits, cache = jax.jit(model.decode_step)(
+            params, jnp.asarray([[tok]], jnp.int32), cache)
+        tok = int(jnp.argmax(logits[0, -1]))
+        out.append(tok)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+class TestRegistry:
+    def test_unknown_id_raises_with_registered_set(self):
+        with pytest.raises(KeyError, match="gemma-2b-smoke"):
+            serve.resolve("no-such-model")
+
+    def test_compile_is_resident(self):
+        m1, p1 = serve.compile_entry(MODEL_ID)
+        m2, p2 = serve.compile_entry(MODEL_ID)
+        assert m1 is m2                     # one cell per id per process
+
+    def test_duplicate_register_needs_override(self):
+        entry = serve.resolve(MODEL_ID)
+        with pytest.raises(ValueError, match="already registered"):
+            serve.register(entry)
+        serve.register(entry, override=True)   # idempotent with override
+
+    def test_builtin_zoo_covers_lms_and_cnns(self):
+        ids = serve.registered_ids()
+        assert "gemma-2b-smoke" in ids and "falcon-mamba-7b-smoke" in ids
+        assert "darknet19-32" in ids and "vgg8-32" in ids
+
+    def test_lm_entries_carry_a_plan(self, cell):
+        _, plan, _ = cell
+        assert plan is not None and plan.model == "gemma_2b_smoke"
+
+
+# ---------------------------------------------------------------------------
+# slot pool
+# ---------------------------------------------------------------------------
+
+class TestSlotPool:
+    def test_alloc_release_cycle(self, cell):
+        model, _, _ = cell
+        pool = SlotPool(model, 3, MAX_LEN)
+        slots = [pool.alloc() for _ in range(3)]
+        assert sorted(slots) == [0, 1, 2]
+        assert pool.alloc() is None and pool.occupancy == 3
+        pool.release(slots[1])
+        assert pool.free_slots == 1 and pool.alloc() == slots[1]
+
+    def test_double_release_raises(self, cell):
+        model, _, _ = cell
+        pool = SlotPool(model, 2, MAX_LEN)
+        s = pool.alloc()
+        pool.release(s)
+        with pytest.raises(ValueError, match="double-released"):
+            pool.release(s)
+
+    def test_adopt_copies_the_row_bitwise(self, cell):
+        model, _, params = cell
+        pool = SlotPool(model, 3, MAX_LEN)
+        prompt = _prompts(1, model.cfg.vocab_size)[0]
+        solo = pool.solo_cache()
+        _, solo = jax.jit(model.prefill)(
+            params, {"tokens": jnp.asarray(prompt[None])}, solo)
+        pool.adopt(1, solo)
+        axis = 1 if model.cfg.scan_layers else 0
+        for pl, sl in zip(jax.tree.leaves(pool.cache),
+                          jax.tree.leaves(solo)):
+            row = jnp.take(pl, 1, axis=axis)
+            np.testing.assert_array_equal(
+                np.asarray(row),
+                np.asarray(jnp.take(sl, 0, axis=axis)))
+
+    def test_suggest_slots_respects_budget(self, cell):
+        model, plan, _ = cell
+        per_slot = cache_bytes_per_slot(model, MAX_LEN)
+        assert per_slot > 0
+        tiny = serve.suggest_slots(model, plan, MAX_LEN,
+                                   sram_capacity_bytes=0)
+        assert tiny == 1                     # never a zero-slot pool
+        big = serve.suggest_slots(model, plan, MAX_LEN,
+                                  sram_capacity_bytes=1 << 40)
+        assert big == 64                     # capped
+        mid = serve.suggest_slots(model, plan, MAX_LEN,
+                                  sram_capacity_bytes=per_slot * 5)
+        assert 1 <= mid <= 5
+
+
+# ---------------------------------------------------------------------------
+# continuous batching scheduler
+# ---------------------------------------------------------------------------
+
+class TestScheduler:
+    def _served(self, cell, n_req, n_slots, gens=None, track=None):
+        model, _, params = cell
+        pool = SlotPool(model, n_slots, MAX_LEN)
+        b = ContinuousBatcher(model, params, pool)
+        prompts = _prompts(n_req, model.cfg.vocab_size)
+        gens = gens or [5] * n_req
+        reqs = [b.submit(p, g) for p, g in zip(prompts, gens)]
+        while not b.idle:
+            b.step()
+            if track is not None:
+                track(b)
+            assert b.step_count < 500, "scheduler stuck"
+        return b, reqs, prompts
+
+    def test_occupancy_never_exceeds_pool(self, cell):
+        peaks = []
+        b, reqs, _ = self._served(
+            cell, n_req=6, n_slots=2,
+            track=lambda b: peaks.append(b.active))
+        assert max(peaks) <= 2
+        assert all(r.done for r in reqs)
+
+    def test_no_starvation_fifo(self, cell):
+        """With a pool of 2 and 6 equal requests, admission must proceed
+        in submit order and every request must finish within the bound
+        of ceil(n/slots) generations."""
+        b, reqs, _ = self._served(cell, n_req=6, n_slots=2)
+        admits = [r.admit_step for r in reqs]
+        assert admits == sorted(admits)          # FIFO admission
+        for r in reqs:
+            assert r.done
+            # waited at most ceil(6/2)=3 generation rounds of 5 tokens
+            assert r.finish_step - r.submit_step <= 3 * 5
+
+    def test_bit_identical_to_solo(self, cell):
+        """The headline invariant: continuous batching (varied prompt
+        lengths, staggered joins, mid-batch retirement) returns exactly
+        the solo path's tokens for every request."""
+        model, _, params = cell
+        # heterogeneous gen lengths force mid-batch retire + late joins
+        gens = [4, 7, 3, 6, 5]
+        b, reqs, prompts = self._served(cell, n_req=5, n_slots=2,
+                                        gens=gens)
+        for r, p, g in zip(reqs, prompts, gens):
+            assert r.tokens == _solo_decode(model, params, p, g), \
+                f"request {r.rid} diverged from solo decode"
+
+    def test_late_submission_joins_running_batch(self, cell):
+        model, _, params = cell
+        pool = SlotPool(model, 2, MAX_LEN)
+        b = ContinuousBatcher(model, params, pool)
+        prompts = _prompts(2, model.cfg.vocab_size)
+        r1 = b.submit(prompts[0], 8)
+        for _ in range(3):
+            b.step()
+        r2 = b.submit(prompts[1], 4)         # joins at a step boundary
+        b.drain(max_steps=100)
+        assert r2.admit_step > r1.admit_step
+        assert r1.tokens == _solo_decode(model, params, prompts[0], 8)
+        assert r2.tokens == _solo_decode(model, params, prompts[1], 4)
+
+    def test_eos_retires_early(self, cell):
+        model, _, params = cell
+        prompt = _prompts(1, model.cfg.vocab_size)[0]
+        ref = _solo_decode(model, params, prompt, 8)
+        eos = ref[2]                          # hit no later than token 3
+        pool = SlotPool(model, 2, MAX_LEN)
+        b = ContinuousBatcher(model, params, pool)
+        r = b.submit(prompt, 8, eos_id=eos)
+        b.drain(max_steps=100)
+        # retire at the FIRST occurrence (eos may repeat earlier in ref)
+        assert r.tokens == ref[:ref.index(eos) + 1]
+        assert len(r.tokens) < 8
+        assert pool.occupancy == 0            # slot returned
+
+    def test_submit_validation(self, cell):
+        model, _, params = cell
+        b = ContinuousBatcher(model, params, SlotPool(model, 1, MAX_LEN))
+        with pytest.raises(ValueError, match="empty prompt"):
+            b.submit([], 4)
+        with pytest.raises(ValueError, match="max_new_tokens"):
+            b.submit([1, 2], 0)
+        with pytest.raises(ValueError, match="max_len"):
+            b.submit(list(range(40)), 20)     # 60 > MAX_LEN
+
+
+# ---------------------------------------------------------------------------
+# front door (async LM + forward-only CNN)
+# ---------------------------------------------------------------------------
+
+class TestFrontDoor:
+    def test_async_generate_batches_concurrent_callers(self, cell):
+        model, _, params = cell
+        srv = serve.LMServer(model, params, n_slots=4, max_len=MAX_LEN)
+        prompts = _prompts(3, model.cfg.vocab_size, seed=7)
+
+        async def main():
+            return await asyncio.gather(
+                *[srv.generate(p, 5) for p in prompts])
+
+        outs = asyncio.run(main())
+        for p, got in zip(prompts, outs):
+            assert got == _solo_decode(model, params, p, 5)
+
+    def test_cnn_front_door_matches_solo_forward(self):
+        srv = serve.load("vgg8-32", n_slots=4, key=jax.random.PRNGKey(1))
+        assert isinstance(srv, serve.CNNServer)
+        rng = np.random.default_rng(3)
+        imgs = rng.normal(size=(6, 32, 32, 3)).astype(np.float32)
+        got = srv.submit(imgs)
+        assert got.shape == (6, srv.model.cfg.num_classes)
+        # chunking + padding must be INVISIBLE: rows equal the same
+        # images run through the same fixed-geometry forward, bitwise
+        pad = jnp.concatenate(
+            [jnp.asarray(imgs[4:]), jnp.zeros((2, 32, 32, 3))], 0)
+        ref = np.concatenate([
+            np.asarray(srv._forward(srv.params, jnp.asarray(imgs[:4]))),
+            np.asarray(srv._forward(srv.params, pad))[:2]], 0)
+        np.testing.assert_array_equal(got, ref)
+        for i in range(6):   # and close to the solo batch=1 forward
+            solo = np.asarray(srv.model.forward(
+                srv.params, jnp.asarray(imgs[i:i + 1])))
+            np.testing.assert_allclose(got[i], solo[0], rtol=2e-3,
+                                       atol=2e-3)
+
+    def test_load_lm_sizes_pool_from_plan(self):
+        srv = serve.load(MODEL_ID, max_len=MAX_LEN)
+        assert isinstance(srv, serve.LMServer)
+        assert 1 <= srv.pool.n_slots <= 64
+
+
+# ---------------------------------------------------------------------------
+# cache/batch geometry validation at the CompiledModel surface
+# ---------------------------------------------------------------------------
+
+class TestCacheGeometry:
+    @pytest.fixture(scope="class")
+    def lm(self):
+        cfg = configs.get_smoke("gemma_2b")
+        model = deploy.compile_model(cfg)
+        return model, model.init(jax.random.PRNGKey(0))
+
+    def test_prefill_batch_mismatch_names_both_shapes(self, lm):
+        model, params = lm
+        cache = model.init_cache(2, 32, dtype=jnp.float32)
+        with pytest.raises(ValueError,
+                           match=r"batch=2.*batch=4") as e:
+            model.prefill(params, {"tokens": jnp.zeros((4, 8), jnp.int32)},
+                          cache)
+        assert "init_cache" in str(e.value)
+
+    def test_decode_batch_mismatch(self, lm):
+        model, params = lm
+        cache = model.init_cache(2, 32, dtype=jnp.float32)
+        with pytest.raises(ValueError, match=r"batch=2.*batch=3"):
+            model.decode_step(params, jnp.zeros((3, 1), jnp.int32), cache)
+
+    def test_decode_multi_token_rejected(self, lm):
+        model, params = lm
+        cache = model.init_cache(2, 32, dtype=jnp.float32)
+        with pytest.raises(ValueError, match="ONE token"):
+            model.decode_step(params, jnp.zeros((2, 4), jnp.int32), cache)
+
+    def test_prompt_longer_than_horizon(self, lm):
+        model, params = lm
+        cache = model.init_cache(2, 16, dtype=jnp.float32)
+        with pytest.raises(ValueError, match="horizon"):
+            model.prefill(params,
+                          {"tokens": jnp.zeros((2, 20), jnp.int32)}, cache)
+
+    def test_raises_under_jit_too(self, lm):
+        model, params = lm
+        cache = model.init_cache(2, 32, dtype=jnp.float32)
+        with pytest.raises(ValueError, match="batch"):
+            jax.jit(model.decode_step)(
+                params, jnp.zeros((5, 1), jnp.int32), cache)
+
+    def test_geometry_helper_all_families(self):
+        for arch, horizon_none in [("falcon_mamba_7b", True),
+                                   ("hymba_1_5b", False),
+                                   ("qwen2_moe_a2_7b", False)]:
+            cfg = configs.get_smoke(arch)
+            cache = api.init_cache(cfg, 3, 16, jnp.float32)
+            batch, horizon = api.cache_geometry(cfg, cache)
+            assert batch == 3
+            assert (horizon is None) == horizon_none
+            if horizon is not None:
+                assert horizon == 16
+
+    def test_valid_geometry_passes(self, lm):
+        model, params = lm
+        cache = model.init_cache(2, 32, dtype=jnp.float32)
+        logits, cache = model.prefill(
+            params, {"tokens": jnp.zeros((2, 8), jnp.int32)}, cache)
+        logits, _ = model.decode_step(
+            params, jnp.zeros((2, 1), jnp.int32), cache)
+        assert logits.shape[0] == 2
+
+
+# ---------------------------------------------------------------------------
+# the per-row ring-slot decode fix (serve-path bug)
+# ---------------------------------------------------------------------------
+
+class TestPerRowCacheRows:
+    def test_mixed_length_rows_decode_independently(self, cell):
+        """Rows at different lengths in ONE cache must each write their
+        own ring slot: before the fix, every row wrote row 0's slot,
+        corrupting any batch whose lengths diverged (exactly the
+        continuous-batching state)."""
+        model, _, params = cell
+        prompts = _prompts(3, model.cfg.vocab_size, seed=11)  # 6,7,8 long
+        solo_caches = []
+        toks = []
+        for p in prompts:
+            c = model.init_cache(1, MAX_LEN, dtype=jnp.float32)
+            lg, c = jax.jit(model.prefill)(
+                params, {"tokens": jnp.asarray(p[None])}, c)
+            solo_caches.append(c)
+            toks.append(int(jnp.argmax(lg[0, -1])))
+        pool = SlotPool(model, 3, MAX_LEN)
+        for i, c in enumerate(solo_caches):
+            pool.adopt(i, c)
+        tok = jnp.asarray(np.asarray(toks, np.int32)[:, None])
+        batched_logits, _ = jax.jit(model.decode_step)(
+            params, tok, pool.cache)
+        for i in range(3):
+            solo_logits, _ = jax.jit(model.decode_step)(
+                params, tok[i:i + 1], solo_caches[i])
+            np.testing.assert_array_equal(
+                np.asarray(batched_logits[i]), np.asarray(solo_logits[0]),
+                err_msg=f"row {i} (len {prompts[i].size}) diverged")

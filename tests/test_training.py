@@ -172,6 +172,30 @@ class TestCheckpoint:
         ckpt.save(str(tmp_path), 3, t, opt, params)
         assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
 
+    def test_gc_keep_zero_deletes_all(self, tmp_path):
+        """keep=0 means keep NOTHING; ``steps[:-0]`` used to slice to []
+        and silently keep everything."""
+        cfg, params, t, f, opt = _tiny_state()
+        for s in [1, 2, 3]:
+            ckpt.save(str(tmp_path), s, t, opt, params)
+        assert ckpt.latest_steps(str(tmp_path)) == [1, 2, 3]
+        ckpt._gc(str(tmp_path), keep=0)
+        assert ckpt.latest_steps(str(tmp_path)) == []
+        ckpt.save(str(tmp_path), 4, t, opt, params, keep=0)
+        assert ckpt.latest_steps(str(tmp_path)) == []   # save honors it too
+
+    def test_latest_steps_skips_stray_dirs(self, tmp_path):
+        """A stray ``step_*`` directory with a non-int suffix (an
+        interrupted write renamed by hand) used to ValueError every
+        restore/gc for the whole directory."""
+        cfg, params, t, f, opt = _tiny_state()
+        ckpt.save(str(tmp_path), 7, t, opt, params)
+        os.makedirs(tmp_path / "step_broken")
+        os.makedirs(tmp_path / "step_00000007_backup")
+        assert ckpt.latest_steps(str(tmp_path)) == [7]
+        step, t2, _, _ = ckpt.restore(str(tmp_path), t, opt, params)
+        assert step == 7
+
 
 # ---------------------------------------------------------------------------
 # fault coordinator
