@@ -32,7 +32,8 @@ import sys
 
 # sections whose wall_us measures kernel execution (gate-worthy); the
 # rest are analytic tables where wall time is incidental
-GATED_SECTIONS = ("conv_kernel", "tuned_kernel", "serve_load")
+GATED_SECTIONS = ("conv_kernel", "tuned_kernel", "serve_load",
+                  "scenario_swap")
 
 
 def latest_baseline(root: str) -> str | None:

@@ -11,6 +11,11 @@
 7. Kernel autotuning (`repro.tune`): the checked-in tuning table the
    kernels consult per GEMM geometry, and why only bit-identical
    tilings are legal entries.
+8. Serving: continuous batching over one resident ROM cell
+   (`repro.serve`).
+9. Scenarios: N trained branches hot-swapped over ONE resident trunk
+   (`repro.scenario`) — switching tasks is a branch swap, not a
+   reload.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -190,3 +195,45 @@ cnn_srv = serve.load("vgg8-32", n_slots=4)
 img = rng.normal(size=(1, 32, 32, 3)).astype(np.float32)
 print("vgg8 via serve front door:", cnn_srv.submit(img).shape,
       "| latency report: python -m benchmarks.serve_load --fast")
+
+# -- 9. scenarios: many branches, one trunk -----------------------------------
+# The ROM trunk is immutable, but the SRAM branch is tiny — so a
+# "scenario" (a dataset, a task, a deployment condition) is just a
+# trained branch tree.  repro.scenario extracts branches as tagged
+# bundles (model + placement-plan fingerprint: a branch can never
+# implant onto a mismatched placement), the ScenarioStore LRU-caches
+# them on device, and the serving layer swaps them over the resident
+# trunk with ONE donated combine — no recompile, zero ROM traffic.
+from repro import scenario
+
+cfg9 = cnn.CNNConfig(name="vgg8", input_size=32)
+plan9 = plan.PlacementPlan.from_config(cfg9)
+model9 = deploy.compile_model(cfg9, plan=plan9)
+p_day = model9.init(jax.random.PRNGKey(0))
+# stand-ins for two trained scenarios (see benchmarks/scenario_swap.py
+# for the real flow: K branches trained on one trunk via the Fig. 10
+# transfer harness)
+br_day, trunk = scenario.split_params(p_day)
+br_night = jax.tree.map(lambda v: v + 0.01, br_day)
+
+serve.register(serve.ModelEntry("vgg8-demo", config=lambda: cfg9,
+                                plan=lambda c: plan9), override=True)
+store = serve.scenario_store("vgg8-demo")
+store.register("day", branch=br_day)
+store.register("night", branch=br_night)
+# load() swaps with a DONATED combine — hand it its own copy so the
+# br_night/trunk views split above stay valid for the parity check
+srv9 = serve.load("vgg8-demo", params=jax.tree.map(jnp.array, p_day),
+                  n_slots=2, scenario="day")
+img2 = np.concatenate([img, img])            # one full 2-slot chunk
+out_day = srv9.submit(img2)
+srv9.swap_scenario("night")                  # one donated combine
+out_night = srv9.submit(img2)
+fresh = jax.jit(model9.forward)(rebranch.combine(br_night, trunk),
+                                jnp.asarray(img2))
+print(f"\nscenario swap day->night on one resident trunk: outputs "
+      f"differ: {not np.array_equal(out_day, out_night)} | night "
+      f"bit-identical to a fresh cell: "
+      f"{np.array_equal(out_night, np.asarray(fresh))}")
+print("swap vs full reload latency: "
+      "python -m benchmarks.scenario_swap --fast")

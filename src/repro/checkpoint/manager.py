@@ -70,6 +70,70 @@ def save(ckpt_dir: str, step: int, trainable, opt_state, params_full,
     return None
 
 
+def _check_structure(data, expected: dict, prefix: str, *, what: str):
+    """Template paths vs stored arrays under ``prefix`` — raise a
+    geometry-style error naming both structures (mirrors the serve
+    layer's cache_geometry errors) instead of a raw KeyError/treedef
+    failure deep inside unflatten."""
+    found = {k[len(prefix) + 1:] for k in data.files
+             if k.startswith(prefix + "/")}
+    missing = set(expected) - found
+    unexpected = found - set(expected)
+    if missing or unexpected:
+        def prev(names, n=4):
+            names = sorted(names)
+            return (", ".join(names[:n])
+                    + (f", ... ({len(names) - n} more)"
+                       if len(names) > n else ""))
+        parts = []
+        if missing:
+            parts.append(f"missing from checkpoint: {prev(missing)}")
+        if unexpected:
+            parts.append(f"not in template: {prev(unexpected)}")
+        raise ValueError(
+            f"{what}: checkpoint state does not match the template "
+            f"({'; '.join(parts)}; template expects {len(expected)} "
+            f"arrays, checkpoint holds {len(found)}) — was this "
+            f"checkpoint written for a different model config or "
+            f"placement plan?")
+    for name, leaf in expected.items():
+        if leaf is None or not hasattr(leaf, "shape"):
+            continue
+        got = data[f"{prefix}/{name}"].shape
+        if tuple(got) != tuple(leaf.shape):
+            raise ValueError(
+                f"{what}: array {name} has shape {tuple(got)} in the "
+                f"checkpoint but the template expects "
+                f"{tuple(leaf.shape)} — geometry changed since save")
+
+
+def _rebuild(data, template, prefix: str, shard_tree=None, *,
+             what: str = "restore"):
+    """Template tree + stored arrays -> restored tree (structure-checked,
+    optionally re-sharded leaf by leaf)."""
+    isnone = lambda x: x is None
+    flat_paths = jax.tree_util.tree_flatten_with_path(
+        template, is_leaf=isnone)[0]
+    _check_structure(
+        data, {jax.tree_util.keystr(p): leaf
+               for p, leaf in flat_paths if leaf is not None},
+        prefix, what=what)
+    shard_flat = (jax.tree_util.tree_flatten_with_path(
+        shard_tree, is_leaf=isnone)[0]
+        if shard_tree is not None else None)
+    leaves = []
+    for i, (p, leaf) in enumerate(flat_paths):
+        if leaf is None:
+            leaves.append(None)
+            continue
+        arr = data[f"{prefix}/{jax.tree_util.keystr(p)}"]
+        if shard_flat is not None and shard_flat[i][1] is not None:
+            arr = jax.device_put(arr, shard_flat[i][1])
+        leaves.append(arr)
+    treedef = jax.tree_util.tree_structure(template, is_leaf=isnone)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
 def _gc(ckpt_dir: str, keep: int):
     steps = sorted(latest_steps(ckpt_dir))
     # keep <= 0 means keep NOTHING: steps[:-0] slices to [] and would
@@ -122,30 +186,98 @@ def restore(ckpt_dir: str, trainable_template, opt_template, params_full,
             f"different ROM image ({meta['rom_fingerprint'][:12]} != "
             f"{booted[:12]}). Refusing to restore.")
     data = np.load(os.path.join(path, "state.npz"))
-
-    def rebuild(template, prefix, shard_tree=None):
-        isnone = lambda x: x is None
-        flat_paths = jax.tree_util.tree_flatten_with_path(
-            template, is_leaf=isnone)[0]
-        shard_flat = (jax.tree_util.tree_flatten_with_path(
-            shard_tree, is_leaf=isnone)[0]
-            if shard_tree is not None else None)
-        leaves = []
-        for i, (p, leaf) in enumerate(flat_paths):
-            if leaf is None:
-                leaves.append(None)
-                continue
-            arr = data[f"{prefix}/{jax.tree_util.keystr(p)}"]
-            if shard_flat is not None and shard_flat[i][1] is not None:
-                arr = jax.device_put(arr, shard_flat[i][1])
-            leaves.append(arr)
-        treedef = jax.tree_util.tree_structure(
-            template, is_leaf=lambda x: x is None)
-        return jax.tree_util.tree_unflatten(treedef, leaves)
-
     t_shard = o_shard = None
     if shardings is not None:
         t_shard, o_shard = shardings
-    trainable = rebuild(trainable_template, "t", t_shard)
-    opt_state = rebuild(opt_template, "o", o_shard)
+    trainable = _rebuild(data, trainable_template, "t", t_shard,
+                         what="restore(trainable)")
+    opt_state = _rebuild(data, opt_template, "o", o_shard,
+                         what="restore(opt_state)")
     return meta["step"], trainable, opt_state, meta.get("extra", {})
+
+
+# ---------------------------------------------------------------------------
+# branch-only checkpoints: one scenario's swappable SRAM state
+# ---------------------------------------------------------------------------
+
+_SCENARIO_RE = re.compile(r"^[A-Za-z0-9][A-Za-z0-9._-]*$")
+
+
+def _branch_path(ckpt_dir: str, scenario: str) -> str:
+    if not _SCENARIO_RE.match(scenario):
+        raise ValueError(
+            f"scenario name {scenario!r} is not filesystem-safe "
+            f"(want [A-Za-z0-9][A-Za-z0-9._-]*)")
+    return os.path.join(ckpt_dir, f"branch_{scenario}")
+
+
+def save_branch(ckpt_dir: str, scenario: str, branch, *,
+                model_name: str, plan=None,
+                extra: dict | None = None) -> None:
+    """Persist ONE scenario's branch tree (the swappable SRAM state).
+
+    The manifest names the placement-plan fingerprint the branch was
+    trained under, so :func:`restore_branch` can never implant it onto
+    a mismatched placement (a ROM<->SRAM flip changes which tensors the
+    branch even holds).  Atomic like :func:`save`: tmp + fsync + rename.
+    """
+    from repro.scenario import branch as branch_lib
+    path = _branch_path(ckpt_dir, scenario)
+    arrays = {f"b/{k}": np.asarray(jax.device_get(v))
+              for k, v in _flatten(branch).items()}
+    manifest = {"scenario": scenario, "model": model_name,
+                "plan_fingerprint": branch_lib.plan_fingerprint(plan),
+                "extra": extra or {}}
+    tmp = path + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    np.savez(os.path.join(tmp, "state.npz"), **arrays)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+
+
+def branch_scenarios(ckpt_dir: str) -> list[str]:
+    """Scenario names with a completed branch checkpoint under dir."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    return sorted(n[len("branch_"):] for n in os.listdir(ckpt_dir)
+                  if n.startswith("branch_") and not n.endswith(".tmp")
+                  and os.path.isfile(os.path.join(ckpt_dir, n,
+                                                  "manifest.json")))
+
+
+def restore_branch(ckpt_dir: str, scenario: str, template, *,
+                   plan=None, model_name: str | None = None):
+    """Load one scenario's branch; refuses a plan-fingerprint mismatch.
+
+    template: the branch tree skeleton (arrays or ShapeDtypeStructs,
+    trunk positions None) the stored state must match — structure and
+    shape mismatches raise the same geometry-style error as
+    :func:`restore`.
+    """
+    from repro.scenario import branch as branch_lib
+    path = _branch_path(ckpt_dir, scenario)
+    if not os.path.isdir(path):
+        raise FileNotFoundError(
+            f"no branch checkpoint for scenario {scenario!r} under "
+            f"{ckpt_dir} (have: {branch_scenarios(ckpt_dir)})")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    want_fp = branch_lib.plan_fingerprint(plan)
+    if manifest["plan_fingerprint"] != want_fp:
+        raise ValueError(
+            f"restore_branch({scenario!r}): branch was saved under "
+            f"placement plan {manifest['plan_fingerprint']} but this "
+            f"deployment runs plan {want_fp}; refusing to restore a "
+            f"branch onto a mismatched placement")
+    if model_name is not None and manifest["model"] != model_name:
+        raise ValueError(
+            f"restore_branch({scenario!r}): branch was saved for model "
+            f"{manifest['model']!r}, not {model_name!r}")
+    data = np.load(os.path.join(path, "state.npz"))
+    return _rebuild(data, template, "b",
+                    what=f"restore_branch({scenario!r})")

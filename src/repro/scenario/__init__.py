@@ -1,0 +1,27 @@
+"""Scenario multiplexing: many workloads over one resident ROM trunk.
+
+The paper's deployment premise — ROM weights are physically immutable,
+only the small SRAM ReBranch adapts — means switching a chip between
+datasets/tasks is a *branch* swap, not a model reload.  CIMPool (arXiv
+2503.22044) scales the same shared-weight-pool idea past one network.
+This package makes that a first-class subsystem:
+
+  * :mod:`repro.scenario.branch` — split a params tree into the frozen
+    trunk and the swappable branch, validate branch geometry against a
+    deployment, fingerprint placement plans, and perform the donated
+    in-place swap (zero trunk recompile, zero ROM traffic).
+  * :mod:`repro.scenario.store`  — :class:`ScenarioStore`: named branch
+    sources (in-memory, bundles, branch-only checkpoints) with an LRU
+    device cache.
+
+The serving layer (``repro.serve``) wires stores to resident cells:
+``serve.load(model_id, scenario=...)`` and ``LMServer.swap_scenario``
+swap branches at decode-step boundaries, with in-flight requests
+finishing on the scenario they were admitted under.
+"""
+
+from repro.scenario.branch import (BranchBundle, branch_template,  # noqa: F401
+                                   extract, implant, plan_fingerprint,
+                                   split_params, swap_params,
+                                   validate_branch)
+from repro.scenario.store import ScenarioStore  # noqa: F401

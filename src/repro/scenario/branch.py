@@ -1,0 +1,226 @@
+"""Branch extraction and validation: the swappable half of a deployment.
+
+YOLoC's premise is that the ROM trunk never moves — only the small SRAM
+state (ReBranch cores, BN statistics, biases, SRAM-resident sites and
+heads) adapts the chip to a new dataset or task.  That SRAM state is
+exactly the *trainable* side of ``rebranch.partition``, so a "scenario"
+is nothing more than one trained branch tree over a fixed trunk.
+
+This module turns that observation into checked artifacts:
+
+  * :func:`split_params`      — (branch, trunk) halves of a params tree.
+  * :func:`branch_template`   — the shape/dtype skeleton a valid branch
+    for a compiled model must match (no allocation: ``jax.eval_shape``).
+  * :func:`validate_branch`   — geometry-style structure check naming
+    the expected vs found tree, mirroring the serve layer's
+    ``cache_geometry`` errors.
+  * :func:`plan_fingerprint`  — a stable hash of a
+    :class:`~repro.plan.PlacementPlan`: a branch trained under one
+    placement can never be implanted onto a mismatched one (a site that
+    flipped ROM<->SRAM changes which tensors even exist in the branch).
+  * :class:`BranchBundle` / :func:`extract` / :func:`implant` — a branch
+    tree tagged with its model + plan fingerprint, and the validated
+    way to put one back onto a resident trunk.
+  * :func:`swap_params`       — the donated in-place combine the serving
+    layer uses at decode-step boundaries: the trunk leaves alias through
+    (zero ROM traffic), the old branch buffers are donated, and only the
+    new branch values are written.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rebranch
+
+
+# ---------------------------------------------------------------------------
+# plan fingerprint
+# ---------------------------------------------------------------------------
+
+def _spec_token(spec) -> str:
+    """Canonical, process-stable serialization of a ReBranchSpec."""
+    cim = spec.cim
+    return repr((
+        spec.d_ratio, spec.u_ratio, spec.enabled, spec.trunk_impl,
+        spec.branch_enabled, jnp.dtype(spec.param_dtype).name,
+        (cim.mode, cim.rows_per_subarray, cim.adc_bits, cim.act_bits,
+         cim.weight_bits, cim.act_group_bits, cim.adc_range_frac,
+         cim.psum_range_frac)))
+
+
+def plan_fingerprint(plan) -> str:
+    """Stable hex digest of a PlacementPlan's full mapping.
+
+    ``hash(plan)`` is salted per process; this digest is what branch
+    checkpoints and :class:`BranchBundle` carry so a branch trained
+    under one placement is rejected by any other.  ``None`` (a family
+    outside the placement subsystem) gets a distinguished constant.
+    """
+    if plan is None:
+        return "no-plan"
+    h = hashlib.sha256()
+    h.update(plan.model.encode())
+    h.update(_spec_token(plan.default).encode())
+    for addr, spec in plan.entries:
+        h.update(addr.encode())
+        h.update(_spec_token(spec).encode())
+    return h.hexdigest()[:16]
+
+
+# ---------------------------------------------------------------------------
+# split / template / validation
+# ---------------------------------------------------------------------------
+
+def split_params(params) -> tuple[Any, Any]:
+    """(branch, trunk): the swappable SRAM tree and the frozen ROM tree.
+
+    Both halves keep the full tree structure with ``None`` at the other
+    half's positions, so ``rebranch.combine(branch, trunk)`` rebuilds
+    the exact params tree.
+    """
+    branch, trunk = rebranch.partition(params)
+    return branch, trunk
+
+
+def branch_template(model):
+    """The branch skeleton (ShapeDtypeStruct leaves) a valid branch for
+    ``model`` must match — computed via eval_shape, no allocation."""
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    return rebranch.partition(shapes)[0]
+
+
+def _leaf_index(tree) -> dict[str, Any]:
+    pairs = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {jax.tree_util.keystr(p): leaf for p, leaf in pairs
+            if leaf is not None}
+
+
+def _preview(names, n=4) -> str:
+    names = sorted(names)
+    shown = ", ".join(names[:n])
+    more = len(names) - n
+    return shown + (f", ... ({more} more)" if more > 0 else "")
+
+
+def validate_branch(branch, template, *, where: str = "branch") -> None:
+    """Structure + shape/dtype check of a branch tree against a template.
+
+    Raises a geometry-style ValueError naming the expected vs found
+    structure (mirrors the serve layer's cache_geometry errors) instead
+    of letting a mismatch surface as a raw treedef/flatten error deep
+    inside ``combine`` or jit.
+    """
+    got = _leaf_index(branch)
+    want = _leaf_index(template)
+    missing = set(want) - set(got)
+    unexpected = set(got) - set(want)
+    if missing or unexpected:
+        parts = []
+        if missing:
+            parts.append(f"missing tensors {_preview(missing)}")
+        if unexpected:
+            parts.append(f"unexpected tensors {_preview(unexpected)}")
+        raise ValueError(
+            f"{where}: branch tree does not match the deployment's "
+            f"branch structure ({'; '.join(parts)}; expected "
+            f"{len(want)} swappable tensors, found {len(got)}) — was "
+            f"this branch extracted under a different placement plan "
+            f"or model config?")
+    for name, leaf in want.items():
+        g = np.asarray(got[name]) if not hasattr(got[name], "shape") \
+            else got[name]
+        g_shape, g_dtype = tuple(g.shape), jnp.dtype(g.dtype)
+        if g_shape != tuple(leaf.shape):
+            raise ValueError(
+                f"{where}: tensor {name} has shape {g_shape} but the "
+                f"deployment expects {tuple(leaf.shape)} — branch was "
+                f"trained for a different geometry")
+        if g_dtype != jnp.dtype(leaf.dtype):
+            raise ValueError(
+                f"{where}: tensor {name} has dtype {g_dtype} but the "
+                f"deployment expects {jnp.dtype(leaf.dtype)}")
+
+
+# ---------------------------------------------------------------------------
+# bundles: a branch tagged with its provenance
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BranchBundle:
+    """One scenario's swappable state plus the keys that make it safe:
+    the model name and the placement-plan fingerprint it was extracted
+    under.  ``implant`` refuses a bundle whose fingerprint does not
+    match the target deployment's plan."""
+    model: str
+    plan_fp: str
+    params: Any                          # branch tree (trunk slots None)
+
+
+def extract(model, params, plan) -> BranchBundle:
+    """Pull the swappable branch out of a full params tree, validated
+    against ``model``'s branch template and tagged with ``plan``."""
+    branch, _ = split_params(params)
+    validate_branch(branch, branch_template(model), where="extract")
+    return BranchBundle(model=model.cfg.name,
+                        plan_fp=plan_fingerprint(plan), params=branch)
+
+
+def implant(model, params, bundle: BranchBundle, plan, *,
+            donate: bool = True):
+    """Put a bundle's branch onto ``params``'s resident trunk.
+
+    Checks model identity and the plan fingerprint, validates the tree
+    geometry, then performs the (by default donated) swap: trunk leaves
+    alias through untouched (zero ROM traffic), old branch buffers are
+    freed.
+    """
+    if bundle.model != model.cfg.name:
+        raise ValueError(
+            f"implant: bundle was extracted from model "
+            f"{bundle.model!r}, not {model.cfg.name!r}")
+    fp = plan_fingerprint(plan)
+    if bundle.plan_fp != fp:
+        raise ValueError(
+            f"implant: bundle was extracted under placement plan "
+            f"{bundle.plan_fp} but this deployment runs plan {fp}; a "
+            f"branch is only valid on the placement it was trained "
+            f"against (a ROM<->SRAM flip changes which tensors exist)")
+    validate_branch(bundle.params, branch_template(model), where="implant")
+    return swap_params(params, bundle.params, donate=donate)
+
+
+# ---------------------------------------------------------------------------
+# the donated swap
+# ---------------------------------------------------------------------------
+
+def _combine(params, branch):
+    # trunk leaves pass through (under donation they alias in place — the
+    # ROM never moves); old branch buffers are freed, new values written
+    return rebranch.combine(branch, rebranch.partition(params)[1])
+
+
+_swap_donated = jax.jit(_combine, donate_argnums=(0,))
+_swap_copy = jax.jit(_combine)
+
+
+def swap_params(params, branch, *, donate: bool = True):
+    """Replace the branch half of ``params`` with ``branch``.
+
+    With ``donate=True`` (the serving default) ``params`` is DONATED:
+    trunk buffers alias through in place (zero ROM traffic) and the old
+    branch buffers are freed, but the caller must drop every outside
+    reference to the tree — including previously split trunk views —
+    and use the returned one.  ``donate=False`` copies instead, for
+    callers that keep the original tree alive (A/B comparisons,
+    benchmarks racing two scenarios side by side).  ``branch`` is never
+    donated — a cached scenario-store copy stays valid across
+    arbitrarily many swaps.
+    """
+    return (_swap_donated if donate else _swap_copy)(params, branch)

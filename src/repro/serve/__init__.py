@@ -20,10 +20,20 @@ can feed it.  This package owns requests on top of
   * :mod:`repro.serve.server`    — the async front door shared by LM
     decode serving and ``cnn.CNNConfig`` forward-only serving:
     ``serve.load(model_id)`` returns a server with ``submit``.
+
+Scenario multiplexing (``repro.scenario``): one resident cell serves N
+registered scenarios.  ``registry.scenario_store(model_id)`` holds the
+named branches (LRU device cache over host/checkpoint sources) and
+``serve.load(model_id, scenario=...)`` / ``LMServer.swap_scenario``
+hot-swap the SRAM branch over the fixed ROM trunk at decode-step
+boundaries — zero trunk recompile, zero ROM traffic, in-flight
+requests finish on the scenario they were admitted under.
 """
 
 from repro.serve.pool import SlotPool, suggest_slots      # noqa: F401
 from repro.serve.registry import (ModelEntry, compile_entry,  # noqa: F401
-                                  register, registered_ids, resolve)
+                                  evict, has_scenarios, register,
+                                  registered_ids, resolve,
+                                  scenario_store)
 from repro.serve.scheduler import ContinuousBatcher, Request  # noqa: F401
 from repro.serve.server import CNNServer, LMServer, load  # noqa: F401

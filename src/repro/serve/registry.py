@@ -35,16 +35,23 @@ class ModelEntry:
         enumerable site tree (the YOLoC all-ROM+branch deployment), or
         no plan for families outside the placement subsystem.
     engine / tune: forwarded to ``deploy.compile_model``.
+    scenarios: optional ((name, factory), ...) of pre-registered branch
+        scenarios; each factory is ``(model, plan) -> branch tree`` and
+        seeds the id's :class:`~repro.scenario.ScenarioStore` lazily on
+        first ``scenario_store(model_id)``.  One compiled resident cell
+        then serves every registered scenario by branch hot-swap.
     """
     model_id: str
     config: Callable[[], Any]
     plan: Callable[[Any], Any] | None = None
     engine: str | None = None
     tune: bool | None = None
+    scenarios: tuple = ()
 
 
 _REGISTRY: dict[str, ModelEntry] = {}
 _COMPILED: dict[str, tuple] = {}          # id -> (CompiledModel, plan)
+_STORES: dict[str, Any] = {}              # id -> ScenarioStore
 _LOCK = threading.Lock()
 
 
@@ -55,8 +62,23 @@ def register(entry: ModelEntry, *, override: bool = False) -> ModelEntry:
                 f"model id {entry.model_id!r} already registered; pass "
                 f"override=True to replace it")
         _REGISTRY[entry.model_id] = entry
-        _COMPILED.pop(entry.model_id, None)   # stale cell, if any
+        # a re-registered entry invalidates BOTH the resident cell and
+        # its scenario store: branches validated against the old cell's
+        # geometry must never implant onto the new one.  compile_entry
+        # additionally re-checks entry identity before publishing a
+        # cell, so a compile racing this register can't resurrect the
+        # stale entry's cell either.
+        _COMPILED.pop(entry.model_id, None)
+        _STORES.pop(entry.model_id, None)
     return entry
+
+
+def evict(model_id: str) -> None:
+    """Drop the resident cell (and scenario store) for ``model_id``;
+    the next ``compile_entry`` recompiles from the registered entry."""
+    with _LOCK:
+        _COMPILED.pop(model_id, None)
+        _STORES.pop(model_id, None)
 
 
 def registered_ids() -> list[str]:
@@ -79,24 +101,62 @@ def compile_entry(model_id: str):
     more schedulers) share the same deployed cell, which is the whole
     point of ROM residency.
     """
+    while True:
+        with _LOCK:
+            if model_id in _COMPILED:
+                return _COMPILED[model_id]
+        entry = resolve(model_id)
+        cfg = entry.config()
+        if entry.plan is not None:
+            plan = entry.plan(cfg)
+        else:
+            # default: the minimum-area YOLoC design point, when the
+            # family has an enumerable site tree (plan stats then size
+            # the KV pool)
+            plan = (plan_lib.solve(cfg, None, engine=entry.engine)
+                    if plan_lib.try_site_tree(cfg) is not None else None)
+        model = deploy.compile_model(
+            cfg, plan=plan,
+            engine=None if plan is not None else entry.engine,
+            tune=entry.tune)
+        with _LOCK:
+            if _REGISTRY.get(model_id) is not entry:
+                continue    # entry re-registered mid-compile: this cell
+                            # is stale — never publish it (it would
+                            # silently serve the OLD entry's config)
+            # lost race against an identical compile: keep the first
+            return _COMPILED.setdefault(model_id, (model, plan))
+
+
+def has_scenarios(model_id: str) -> bool:
+    """True when the id has a live store or entry-declared scenarios."""
+    if model_id in _STORES:
+        return True
+    entry = _REGISTRY.get(model_id)
+    return bool(entry is not None and entry.scenarios)
+
+
+def scenario_store(model_id: str, *, capacity: int = 4):
+    """The id's ScenarioStore, bound to its resident cell (created — and
+    seeded from ``ModelEntry.scenarios`` factories — on first use).
+
+    One store per id per process, like the compiled cell it hangs off:
+    every server for the id shares the same registered scenarios and
+    LRU branch cache.  Re-registering the entry drops the store along
+    with the cell.
+    """
     with _LOCK:
-        if model_id in _COMPILED:
-            return _COMPILED[model_id]
+        store = _STORES.get(model_id)
+    if store is not None:
+        return store
+    from repro.scenario import ScenarioStore
+    model, plan = compile_entry(model_id)
+    store = ScenarioStore(model, plan, capacity=capacity)
     entry = resolve(model_id)
-    cfg = entry.config()
-    if entry.plan is not None:
-        plan = entry.plan(cfg)
-    else:
-        # default: the minimum-area YOLoC design point, when the family
-        # has an enumerable site tree (plan stats then size the KV pool)
-        plan = (plan_lib.solve(cfg, None, engine=entry.engine)
-                if plan_lib.try_site_tree(cfg) is not None else None)
-    model = deploy.compile_model(
-        cfg, plan=plan, engine=None if plan is not None else entry.engine,
-        tune=entry.tune)
+    for name, factory in entry.scenarios:
+        store.register(name, branch=factory(model, plan))
     with _LOCK:
-        # lost race: keep the first compile (the resident cell)
-        return _COMPILED.setdefault(model_id, (model, plan))
+        return _STORES.setdefault(model_id, store)
 
 
 def _builtin_entries():

@@ -18,6 +18,17 @@ Invariants (tested in tests/test_serve.py):
 
 Decoding is greedy (argmax) — deterministic, which is what makes the
 bit-parity invariant testable end to end.
+
+Scenario hot-swap (repro.scenario): the batcher can swap the params
+tree's SRAM branch over the resident ROM trunk mid-stream.  A swap is a
+BARRIER in the same FIFO queue requests ride: it applies at a
+decode-step boundary once every in-flight request has retired, so a
+request admitted under scenario A decodes entirely under A — bit-
+identical to a freshly compiled single-scenario cell — while requests
+tagged for B wait behind the barrier.  The swap itself is one donated
+combine (``scenario.swap_params``): trunk buffers alias through
+untouched, zero ROM traffic, no recompile (the params tree structure is
+unchanged, so the resident jit executables are reused as-is).
 """
 
 from __future__ import annotations
@@ -30,6 +41,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.scenario import swap_params
+
+
+@dataclasses.dataclass
+class _Swap:
+    """A scenario-swap barrier in the admission queue."""
+    scenario: str
+    branch: object                        # the new branch tree
+
 
 @dataclasses.dataclass
 class Request:
@@ -38,6 +58,7 @@ class Request:
     prompt: np.ndarray                    # [S] int32 token ids
     max_new_tokens: int
     eos_id: int | None = None
+    scenario: str | None = None           # branch the request runs under
     # filled in by the scheduler:
     tokens: list = dataclasses.field(default_factory=list)
     slot: int | None = None
@@ -59,16 +80,18 @@ class Request:
 class ContinuousBatcher:
     """Admission queue + decode loop over one model and one slot pool."""
 
-    def __init__(self, model, params, pool):
+    def __init__(self, model, params, pool, *, scenario: str | None = None):
         self.model = model
         self.params = params
         self.pool = pool
+        self.scenario = scenario            # live branch label
+        self.swap_count = 0                 # swaps applied so far
         self._prefill = jax.jit(model.prefill)
         # donate the cache: the pool always replaces it with the returned
         # tree, so decode updates the KV rows in place instead of copying
         # the whole pool every step
         self._decode = jax.jit(model.decode_step, donate_argnums=(2,))
-        self._queue: collections.deque[Request] = collections.deque()
+        self._queue: collections.deque = collections.deque()
         self._active: dict[int, Request] = {}       # slot -> request
         # the token column fed to decode_step: one row per slot; free
         # rows carry 0 (their output is masked by never being read)
@@ -77,8 +100,25 @@ class ContinuousBatcher:
         self.step_count = 0
 
     # -- front door ------------------------------------------------------
+    def pending_scenario(self) -> str | None:
+        """The branch label after every queued swap barrier applies —
+        what a submit() issued now will be admitted under."""
+        for item in reversed(self._queue):
+            if isinstance(item, _Swap):
+                return item.scenario
+        return self.scenario
+
+    def swap(self, scenario: str | None, branch) -> None:
+        """Queue a branch hot-swap.  FIFO with requests: everything
+        submitted before the swap decodes under the old branch,
+        everything after under the new one.  The swap applies at a
+        decode-step boundary once the in-flight set has drained —
+        in-flight requests always finish on their admitted scenario."""
+        self._queue.append(_Swap(scenario=scenario, branch=branch))
+
     def submit(self, prompt, max_new_tokens: int,
-               eos_id: int | None = None) -> Request:
+               eos_id: int | None = None,
+               scenario: str | None = None) -> Request:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size == 0:
             raise ValueError("empty prompt")
@@ -91,8 +131,16 @@ class ContinuousBatcher:
                 f"request needs {total} cache slots "
                 f"(prompt {prompt.size} + {max_new_tokens} new) but the "
                 f"pool was sized for max_len={self.pool.max_len}")
+        tail = self.pending_scenario()
+        if scenario is not None and scenario != tail:
+            raise ValueError(
+                f"submit(scenario={scenario!r}) but the queue tail runs "
+                f"scenario {tail!r}; call swap({scenario!r}, branch) "
+                f"first (LMServer.submit(..., scenario=...) does this "
+                f"automatically via the scenario store)")
         req = Request(rid=self._next_rid, prompt=prompt,
-                      max_new_tokens=max_new_tokens, eos_id=eos_id)
+                      max_new_tokens=max_new_tokens, eos_id=eos_id,
+                      scenario=tail)
         req.submit_step = self.step_count
         req.submit_s = time.perf_counter()
         self._next_rid += 1
@@ -102,7 +150,7 @@ class ContinuousBatcher:
     # -- scheduler state -------------------------------------------------
     @property
     def queued(self) -> int:
-        return len(self._queue)
+        return sum(1 for x in self._queue if isinstance(x, Request))
 
     @property
     def active(self) -> int:
@@ -125,11 +173,29 @@ class ContinuousBatcher:
         if len(req.tokens) >= req.max_new_tokens or hit_eos:
             self._finish(req)
 
+    def _apply_swap(self, sw: _Swap) -> None:
+        """One donated combine: branch leaves replaced, trunk buffers
+        alias through in place (zero ROM traffic, no recompile — the
+        tree structure is unchanged so the jitted prefill/decode
+        executables are reused as-is)."""
+        self.params = swap_params(self.params, sw.branch)
+        self.scenario = sw.scenario
+        self.swap_count += 1
+
     def _admit(self) -> None:
         """FIFO admission into free slots; the prefill runs solo
         (batch=1) so its bits match the standalone path exactly, and the
-        row joins the batch at the next decode boundary."""
-        while self._queue and self.pool.free_slots:
+        row joins the batch at the next decode boundary.  A queued
+        _Swap barrier applies only once the in-flight set has drained
+        (admitted requests finish on their admitted scenario); requests
+        behind it wait."""
+        while self._queue and (isinstance(self._queue[0], _Swap)
+                               or self.pool.free_slots):
+            if isinstance(self._queue[0], _Swap):
+                if self._active:
+                    return        # in-flight rows finish on their branch
+                self._apply_swap(self._queue.popleft())
+                continue
             req = self._queue.popleft()
             slot = self.pool.alloc()
             solo = self.pool.solo_cache()

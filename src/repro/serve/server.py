@@ -30,18 +30,50 @@ from repro.serve.scheduler import ContinuousBatcher
 
 
 class LMServer:
-    """Continuous-batching decode serving for one resident LM cell."""
+    """Continuous-batching decode serving for one resident LM cell.
+
+    With a :class:`~repro.scenario.ScenarioStore` attached, one cell
+    serves N scenarios: ``swap_scenario`` (or ``submit(...,
+    scenario=...)``) queues a branch hot-swap behind the in-flight
+    requests — zero trunk recompile, zero ROM traffic, and every
+    request decodes entirely under the scenario it was admitted with.
+    """
 
     def __init__(self, model, params, *, n_slots: int, max_len: int,
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, store=None, scenario=None):
         self.model = model
-        self.params = params
+        self.store = store
         self.pool = SlotPool(model, n_slots, max_len, dtype=dtype)
-        self.batcher = ContinuousBatcher(model, params, self.pool)
+        self.batcher = ContinuousBatcher(model, params, self.pool,
+                                         scenario=scenario)
+
+    @property
+    def params(self):
+        """The live params tree (the batcher owns it: scenario swaps
+        donate the old tree, so this is the ONE valid reference)."""
+        return self.batcher.params
+
+    @property
+    def scenario(self):
+        return self.batcher.scenario
+
+    def swap_scenario(self, name: str):
+        """Queue a hot-swap to a registered scenario's branch (applies
+        at a decode-step boundary after in-flight requests retire)."""
+        if self.store is None:
+            raise ValueError(
+                "no ScenarioStore attached to this server; serve.load"
+                "(model_id, scenario=...) or pass store= to LMServer")
+        self.batcher.swap(name, self.store.get(name))
 
     # -- sync surface ---------------------------------------------------
-    def submit(self, prompt, max_new_tokens: int, eos_id=None):
-        return self.batcher.submit(prompt, max_new_tokens, eos_id=eos_id)
+    def submit(self, prompt, max_new_tokens: int, eos_id=None,
+               scenario=None):
+        if scenario is not None and \
+                scenario != self.batcher.pending_scenario():
+            self.swap_scenario(scenario)
+        return self.batcher.submit(prompt, max_new_tokens, eos_id=eos_id,
+                                   scenario=scenario)
 
     def step(self) -> bool:
         return self.batcher.step()
@@ -51,14 +83,15 @@ class LMServer:
 
     # -- async surface --------------------------------------------------
     async def generate(self, prompt, max_new_tokens: int,
-                       eos_id=None) -> list[int]:
+                       eos_id=None, scenario=None) -> list[int]:
         """Submit and await one request; concurrent callers batch.
 
         Cooperative pump: each waiter advances the shared scheduler one
         tick per event-loop round, so N concurrent ``generate`` calls
         decode as one batch instead of N solo loops.
         """
-        req = self.submit(prompt, max_new_tokens, eos_id=eos_id)
+        req = self.submit(prompt, max_new_tokens, eos_id=eos_id,
+                          scenario=scenario)
         while not req.done:
             self.batcher.step()
             await asyncio.sleep(0)
@@ -74,13 +107,29 @@ class CNNServer:
     padding never changes a real row's result).
     """
 
-    def __init__(self, model, params, *, n_slots: int):
+    def __init__(self, model, params, *, n_slots: int, store=None,
+                 scenario=None):
         if n_slots < 1:
             raise ValueError(f"need at least one slot, got {n_slots}")
         self.model = model
         self.params = params
+        self.store = store
+        self.scenario = scenario
         self.n_slots = int(n_slots)
         self._forward = jax.jit(model.forward)
+
+    def swap_scenario(self, name: str):
+        """Hot-swap to a registered scenario's branch.  Forward serving
+        is synchronous, so the swap applies immediately (there are no
+        in-flight requests to protect); the jitted forward is reused —
+        no recompile, no trunk traffic."""
+        if self.store is None:
+            raise ValueError(
+                "no ScenarioStore attached to this server; serve.load"
+                "(model_id, scenario=...) or pass store= to CNNServer")
+        from repro.scenario import swap_params
+        self.params = swap_params(self.params, self.store.get(name))
+        self.scenario = name
 
     def submit(self, images) -> np.ndarray:
         """images: [B, H, W, C] -> model outputs for all B rows."""
@@ -109,22 +158,35 @@ class CNNServer:
 
 def load(model_id: str, *, params=None, key=None, n_slots=None,
          max_len: int = 128, dtype=jnp.float32,
-         sram_capacity_bytes: int = 64 << 20):
+         sram_capacity_bytes: int = 64 << 20, scenario: str | None = None):
     """One front door for LM decode and CNN forward serving.
 
     Resolves ``model_id`` through the registry (the cell is compiled at
     most once per process), initialises params unless given, and sizes
     the KV pool from the entry's placement plan when ``n_slots`` is not
     forced.
+
+    scenario: start the server on a registered scenario's branch (see
+    ``registry.scenario_store`` / ``repro.scenario``): the branch is
+    implanted over the resident trunk before serving, and the returned
+    server carries the store so ``swap_scenario`` / ``submit(...,
+    scenario=...)`` can hot-swap to the other registered scenarios.
     """
     model, plan = registry.compile_entry(model_id)
     if params is None:
         params = model.init(key if key is not None
                             else jax.random.PRNGKey(0))
+    store = registry.scenario_store(model_id) \
+        if scenario is not None or registry.has_scenarios(model_id) \
+        else None
+    if scenario is not None:
+        from repro.scenario import swap_params
+        params = swap_params(params, store.get(scenario))
     if isinstance(model.cfg, cnn.CNNConfig):
-        return CNNServer(model, params, n_slots=n_slots or 8)
+        return CNNServer(model, params, n_slots=n_slots or 8,
+                         store=store, scenario=scenario)
     if n_slots is None:
         n_slots = suggest_slots(model, plan, max_len, dtype=dtype,
                                 sram_capacity_bytes=sram_capacity_bytes)
     return LMServer(model, params, n_slots=n_slots, max_len=max_len,
-                    dtype=dtype)
+                    dtype=dtype, store=store, scenario=scenario)

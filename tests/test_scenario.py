@@ -1,0 +1,451 @@
+"""Scenario subsystem: branch hot-swap over one resident ROM trunk.
+
+The load-bearing invariants (ISSUE 8):
+  * a hot-swapped branch is BIT-identical to a freshly compiled
+    single-scenario cell — for every CNN trunk and for LM decode
+    through the continuous-batching scheduler;
+  * a swap is a FIFO barrier: in-flight requests finish entirely under
+    the scenario they were admitted with, requests behind the barrier
+    decode entirely under the new one (mixed-scenario isolation);
+  * the ScenarioStore's device cache evicts in LRU order;
+  * a branch can never cross a placement boundary: plan-fingerprint
+    mismatches are rejected at register/restore/implant time, and
+    template mismatches raise geometry-style errors naming the
+    expected vs found structure (mirrors cache_geometry / PR 7).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import deploy, scenario, serve
+from repro.checkpoint import manager as ckpt
+from repro.core import rebranch
+from repro.core.rebranch import ReBranchSpec
+from repro.models import cnn
+from repro.plan import PlacementPlan
+from repro.scenario import ScenarioStore
+from repro.serve.pool import SlotPool
+from repro.serve.scheduler import ContinuousBatcher
+
+LM_ID = "gemma-2b-smoke"
+MAX_LEN = 48
+CNN_TRUNKS = ("vgg8", "resnet18", "darknet19", "tiny_yolo")
+
+
+def _copy(tree):
+    return jax.tree.map(jnp.array, tree)
+
+
+def _perturb(branch, salt=1):
+    """A distinct-but-compatible scenario branch (no training needed)."""
+    def f(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x + jnp.asarray(0.01 * salt, x.dtype)
+        return x
+    return jax.tree.map(f, branch)
+
+
+@pytest.fixture(scope="module")
+def vgg_cell():
+    """Small vgg8 deployment with an explicit plan (cheap to compile)."""
+    cfg = cnn.CNNConfig(name="vgg8", input_size=16)
+    plan = PlacementPlan.from_config(cfg)
+    model = deploy.compile_model(cfg, plan=plan)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, plan, params
+
+
+@pytest.fixture(scope="module")
+def lm_cell():
+    model, plan = serve.compile_entry(LM_ID)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, plan, params
+
+
+def _solo_decode(model, params, prompt, n_new):
+    cache = model.init_cache(1, MAX_LEN, dtype=jnp.float32)
+    logits, cache = jax.jit(model.prefill)(
+        params, {"tokens": jnp.asarray(np.asarray(prompt)[None])}, cache)
+    tok = int(jnp.argmax(logits[0, -1]))
+    out = [tok]
+    for _ in range(n_new - 1):
+        logits, cache = jax.jit(model.decode_step)(
+            params, jnp.asarray([[tok]], jnp.int32), cache)
+        tok = int(jnp.argmax(logits[0, -1]))
+        out.append(tok)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# branch extraction / validation / fingerprints
+# ---------------------------------------------------------------------------
+
+class TestBranch:
+    def test_split_combine_roundtrip(self, vgg_cell):
+        model, _, params = vgg_cell
+        branch, trunk = scenario.split_params(params)
+        rebuilt = rebranch.combine(branch, trunk)
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(rebuilt)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_plan_fingerprint_stable_and_discriminating(self, vgg_cell):
+        _, plan, _ = vgg_cell
+        fp = scenario.plan_fingerprint(plan)
+        assert fp == scenario.plan_fingerprint(plan)   # process-stable
+        assert scenario.plan_fingerprint(None) == "no-plan"
+        assert fp != "no-plan"
+        other = PlacementPlan.from_config(
+            cnn.CNNConfig(name="vgg8", input_size=16,
+                          rebranch=ReBranchSpec(d_ratio=8)))
+        assert scenario.plan_fingerprint(other) != fp
+
+    def test_validate_missing_tensors(self, vgg_cell):
+        model, _, _ = vgg_cell
+        # a trunk-only deployment's branch lacks the adapter tensors
+        bare = cnn.CNNConfig(name="vgg8", input_size=16,
+                             rebranch=ReBranchSpec(branch_enabled=False))
+        bare_model = deploy.compile_model(bare)
+        small = rebranch.partition(
+            bare_model.init(jax.random.PRNGKey(1)))[0]
+        with pytest.raises(ValueError, match="missing tensors"):
+            scenario.validate_branch(
+                small, scenario.branch_template(model))
+        # and the converse direction reports the extras
+        full = rebranch.partition(model.init(jax.random.PRNGKey(1)))[0]
+        with pytest.raises(ValueError, match="unexpected tensors"):
+            scenario.validate_branch(
+                full, scenario.branch_template(bare_model))
+
+    def test_validate_shape_mismatch_names_both(self, vgg_cell):
+        model, _, params = vgg_cell
+        branch = rebranch.partition(params)[0]
+        leaves, treedef = jax.tree_util.tree_flatten(branch)
+        leaves[0] = jnp.zeros((3, 3), leaves[0].dtype)
+        bad = jax.tree_util.tree_unflatten(treedef, leaves)
+        with pytest.raises(ValueError, match=r"\(3, 3\)"):
+            scenario.validate_branch(bad, scenario.branch_template(model))
+
+    def test_extract_implant_roundtrip(self, vgg_cell):
+        model, plan, params = vgg_cell
+        p2 = _copy(params)
+        bundle = scenario.extract(
+            model, rebranch.combine(_perturb(scenario.split_params(p2)[0]),
+                                    scenario.split_params(p2)[1]), plan)
+        out = scenario.implant(model, _copy(params), bundle, plan,
+                               donate=False)
+        ref = rebranch.combine(bundle.params,
+                               scenario.split_params(params)[1])
+        x = jnp.asarray(np.random.default_rng(0).normal(
+            size=(2, 16, 16, 3)), jnp.float32)
+        np.testing.assert_array_equal(
+            np.asarray(jax.jit(model.forward)(out, x)),
+            np.asarray(jax.jit(model.forward)(ref, x)))
+
+    def test_implant_rejects_plan_mismatch(self, vgg_cell):
+        model, plan, params = vgg_cell
+        bundle = scenario.extract(model, params, plan)
+        with pytest.raises(ValueError, match="placement plan"):
+            scenario.implant(model, _copy(params), bundle, None)
+
+    def test_implant_rejects_model_mismatch(self, vgg_cell):
+        model, plan, params = vgg_cell
+        bundle = scenario.extract(model, params, plan)
+        wrong = scenario.BranchBundle(model="resnet18",
+                                      plan_fp=bundle.plan_fp,
+                                      params=bundle.params)
+        with pytest.raises(ValueError, match="resnet18"):
+            scenario.implant(model, _copy(params), wrong, plan)
+
+
+# ---------------------------------------------------------------------------
+# hot-swap bit-parity: every CNN trunk
+# ---------------------------------------------------------------------------
+
+class TestSwapParity:
+    @pytest.mark.parametrize("name", CNN_TRUNKS)
+    def test_swap_matches_freshly_compiled_cell(self, name):
+        """The headline invariant: swapping branch B onto a resident
+        trunk gives EXACTLY the bits of compiling a new cell and
+        combining B with the trunk from scratch."""
+        cfg = cnn.CNNConfig(name=name, input_size=32)
+        model = deploy.compile_model(cfg)
+        pA = model.init(jax.random.PRNGKey(0))
+        brB = _perturb(scenario.split_params(pA)[0], salt=3)
+        swapped = scenario.swap_params(_copy(pA), brB, donate=False)
+        fresh_model = deploy.compile_model(cfg)      # new cell, same cfg
+        fresh = rebranch.combine(brB, scenario.split_params(pA)[1])
+        x = jnp.asarray(np.random.default_rng(1).normal(
+            size=(2, 32, 32, 3)), jnp.float32)
+        np.testing.assert_array_equal(
+            np.asarray(jax.jit(model.forward)(swapped, x)),
+            np.asarray(jax.jit(fresh_model.forward)(fresh, x)),
+            err_msg=f"{name}: hot-swap diverged from fresh cell")
+
+    def test_swap_leaves_trunk_aliased(self, vgg_cell):
+        """The trunk (ROM) tensors pass through the swap untouched."""
+        model, _, params = vgg_cell
+        p = _copy(params)
+        out = scenario.swap_params(
+            p, _perturb(scenario.split_params(params)[0], salt=2),
+            donate=False)
+        _, trunk_out = scenario.split_params(out)
+        _, trunk_in = scenario.split_params(params)
+        for a, b in zip(jax.tree.leaves(trunk_in),
+                        jax.tree.leaves(trunk_out)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# ScenarioStore: strict names + LRU device cache
+# ---------------------------------------------------------------------------
+
+class TestStore:
+    def _store(self, vgg_cell, capacity=2, n=3):
+        model, plan, params = vgg_cell
+        store = ScenarioStore(model, plan, capacity=capacity)
+        base = scenario.split_params(params)[0]
+        for i in range(n):
+            store.register(f"s{i}", branch=_perturb(base, salt=i + 1))
+        return store
+
+    def test_lru_eviction_order(self, vgg_cell):
+        store = self._store(vgg_cell, capacity=2, n=3)
+        store.get("s0")
+        store.get("s1")
+        assert store.cached() == ["s0", "s1"]
+        store.get("s2")                      # evicts s0 (LRU)
+        assert store.cached() == ["s1", "s2"]
+        store.get("s1")                      # hit: s1 becomes MRU
+        store.get("s0")                      # reload: evicts s2, not s1
+        assert store.cached() == ["s1", "s0"]
+        assert store.evicted == ["s0", "s2"]
+        assert store.hits == 1 and store.misses == 4
+
+    def test_unknown_scenario_lists_registered(self, vgg_cell):
+        store = self._store(vgg_cell)
+        with pytest.raises(KeyError, match=r"s0.*s1.*s2"):
+            store.get("nope")
+
+    def test_duplicate_register_needs_override(self, vgg_cell):
+        store = self._store(vgg_cell)
+        base = scenario.split_params(vgg_cell[2])[0]
+        with pytest.raises(ValueError, match="already registered"):
+            store.register("s0", branch=base)
+        store.register("s0", branch=base, override=True)
+
+    def test_bundle_plan_mismatch_rejected(self, vgg_cell):
+        model, plan, params = vgg_cell
+        store = ScenarioStore(model, plan)
+        bundle = scenario.BranchBundle(
+            model=model.cfg.name, plan_fp="deadbeefdeadbeef",
+            params=scenario.split_params(params)[0])
+        with pytest.raises(ValueError, match="mismatched placement"):
+            store.register("x", bundle=bundle)
+
+    def test_exactly_one_source(self, vgg_cell):
+        model, plan, params = vgg_cell
+        store = ScenarioStore(model, plan)
+        with pytest.raises(ValueError, match="exactly one"):
+            store.register("x")
+
+
+# ---------------------------------------------------------------------------
+# branch-only checkpoints
+# ---------------------------------------------------------------------------
+
+class TestBranchCheckpoint:
+    def test_roundtrip_bitwise(self, vgg_cell, tmp_path):
+        model, plan, params = vgg_cell
+        branch = _perturb(scenario.split_params(params)[0], salt=5)
+        ckpt.save_branch(str(tmp_path), "night", branch,
+                         model_name=model.cfg.name, plan=plan,
+                         extra={"acc": 0.5})
+        assert ckpt.branch_scenarios(str(tmp_path)) == ["night"]
+        got = ckpt.restore_branch(str(tmp_path), "night",
+                                  scenario.branch_template(model),
+                                  plan=plan, model_name=model.cfg.name)
+        for a, b in zip(jax.tree.leaves(branch), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_plan_fingerprint_mismatch_refused(self, vgg_cell, tmp_path):
+        model, plan, params = vgg_cell
+        branch = scenario.split_params(params)[0]
+        ckpt.save_branch(str(tmp_path), "day", branch,
+                         model_name=model.cfg.name, plan=plan)
+        with pytest.raises(ValueError, match="mismatched placement"):
+            ckpt.restore_branch(str(tmp_path), "day",
+                                scenario.branch_template(model), plan=None)
+
+    def test_model_mismatch_refused(self, vgg_cell, tmp_path):
+        model, plan, params = vgg_cell
+        ckpt.save_branch(str(tmp_path), "day",
+                         scenario.split_params(params)[0],
+                         model_name=model.cfg.name, plan=plan)
+        with pytest.raises(ValueError, match="resnet18"):
+            ckpt.restore_branch(str(tmp_path), "day",
+                                scenario.branch_template(model),
+                                plan=plan, model_name="resnet18")
+
+    def test_missing_scenario_lists_available(self, vgg_cell, tmp_path):
+        model, plan, params = vgg_cell
+        ckpt.save_branch(str(tmp_path), "day",
+                         scenario.split_params(params)[0],
+                         model_name=model.cfg.name, plan=plan)
+        with pytest.raises(FileNotFoundError, match="day"):
+            ckpt.restore_branch(str(tmp_path), "night",
+                                scenario.branch_template(model), plan=plan)
+
+    def test_template_mismatch_is_geometry_error(self, vgg_cell, tmp_path):
+        """Satellite 2: restoring onto the wrong template raises the
+        same geometry-style error shape as PR 7's cache_geometry —
+        names the missing/extra arrays, not a raw treedef crash."""
+        model, plan, params = vgg_cell
+        ckpt.save_branch(str(tmp_path), "day",
+                         scenario.split_params(params)[0],
+                         model_name=model.cfg.name, plan=plan)
+        bare = deploy.compile_model(cnn.CNNConfig(
+            name="vgg8", input_size=16,
+            rebranch=ReBranchSpec(branch_enabled=False)))
+        with pytest.raises(ValueError,
+                           match="does not match the template"):
+            ckpt.restore_branch(str(tmp_path), "day",
+                                scenario.branch_template(bare), plan=plan)
+
+    def test_shape_drift_is_geometry_error(self, vgg_cell, tmp_path):
+        model, plan, params = vgg_cell
+        ckpt.save_branch(str(tmp_path), "day",
+                         scenario.split_params(params)[0],
+                         model_name=model.cfg.name, plan=plan)
+        wide = deploy.compile_model(cnn.CNNConfig(
+            name="vgg8", input_size=16, num_classes=21))
+        with pytest.raises(ValueError, match="geometry changed|does not "
+                                             "match the template"):
+            ckpt.restore_branch(str(tmp_path), "day",
+                                scenario.branch_template(wide), plan=plan)
+
+    def test_unsafe_scenario_name_rejected(self, vgg_cell, tmp_path):
+        model, plan, params = vgg_cell
+        with pytest.raises(ValueError, match="filesystem-safe"):
+            ckpt.save_branch(str(tmp_path), "../escape",
+                             scenario.split_params(params)[0],
+                             model_name=model.cfg.name, plan=plan)
+
+    def test_store_serves_from_checkpoint_source(self, vgg_cell, tmp_path):
+        model, plan, params = vgg_cell
+        branch = _perturb(scenario.split_params(params)[0], salt=7)
+        ckpt.save_branch(str(tmp_path), "cold", branch,
+                         model_name=model.cfg.name, plan=plan)
+        store = ScenarioStore(model, plan, capacity=1)
+        store.register("cold", ckpt_dir=str(tmp_path))
+        got = store.get("cold")
+        for a, b in zip(jax.tree.leaves(branch), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# scheduler: swap barrier + mixed-scenario isolation (LM decode)
+# ---------------------------------------------------------------------------
+
+class TestSchedulerSwap:
+    def test_mixed_scenario_batched_decode_isolation(self, lm_cell):
+        """r1 admitted under A, swap queued, r2 under B: both must be
+        bit-identical to solo decodes under their own full params, the
+        swap must apply only after r1 retires, and FIFO must hold."""
+        model, _, pA = lm_cell
+        brB = _perturb(rebranch.partition(pA)[0], salt=2)
+        pB = rebranch.combine(brB, rebranch.partition(pA)[1])
+        rng = np.random.default_rng(5)
+        prompts = [rng.integers(0, model.cfg.vocab_size, size=7),
+                   rng.integers(0, model.cfg.vocab_size, size=5)]
+        pool = SlotPool(model, 2, MAX_LEN)
+        b = ContinuousBatcher(model, _copy(pA), pool, scenario="a")
+        r1 = b.submit(prompts[0], 6, scenario="a")
+        b.step()                              # r1 admitted and decoding
+        b.swap("b", brB)
+        r2 = b.submit(prompts[1], 4, scenario="b")
+        assert b.scenario == "a"              # barrier not applied yet
+        b.drain(max_steps=100)
+        assert b.swap_count == 1 and b.scenario == "b"
+        assert r2.admit_step >= r1.finish_step    # waited for the barrier
+        assert r1.tokens == _solo_decode(model, pA, prompts[0], 6)
+        assert r2.tokens == _solo_decode(model, pB, prompts[1], 4)
+
+    def test_submit_mismatched_scenario_requires_swap(self, lm_cell):
+        model, _, pA = lm_cell
+        b = ContinuousBatcher(model, _copy(pA), SlotPool(model, 1, MAX_LEN),
+                              scenario="a")
+        with pytest.raises(ValueError, match="queue tail runs"):
+            b.submit([1, 2, 3], 2, scenario="b")
+
+    def test_pending_scenario_tracks_queue_tail(self, lm_cell):
+        model, _, pA = lm_cell
+        b = ContinuousBatcher(model, _copy(pA), SlotPool(model, 1, MAX_LEN),
+                              scenario="a")
+        assert b.pending_scenario() == "a"
+        b.swap("b", _perturb(rebranch.partition(pA)[0]))
+        assert b.pending_scenario() == "b"
+        assert b.scenario == "a"              # applies at a boundary only
+
+
+# ---------------------------------------------------------------------------
+# registry + front door integration
+# ---------------------------------------------------------------------------
+
+class TestRegistryScenarios:
+    def test_entry_scenarios_seed_the_store_and_serve(self):
+        """serve.load(id, scenario=...) over an entry-declared scenario
+        must equal the branch combined onto the trunk by hand."""
+        cfg = cnn.CNNConfig(name="vgg8", input_size=16)
+        plan = PlacementPlan.from_config(cfg)
+
+        def factory(model, plan):
+            return _perturb(scenario.split_params(
+                model.init(jax.random.PRNGKey(3)))[0], salt=4)
+
+        serve.register(serve.ModelEntry(
+            "vgg8-scn-test", config=lambda: cfg, plan=lambda c: plan,
+            scenarios=(("alt", factory),)), override=True)
+        assert serve.has_scenarios("vgg8-scn-test")
+        model, _ = serve.compile_entry("vgg8-scn-test")
+        params = model.init(jax.random.PRNGKey(0))
+        srv = serve.load("vgg8-scn-test", params=_copy(params),
+                         n_slots=2, scenario="alt")
+        assert isinstance(srv, serve.CNNServer) and srv.scenario == "alt"
+        store = serve.scenario_store("vgg8-scn-test")
+        ref = rebranch.combine(store.get("alt"),
+                               rebranch.partition(params)[1])
+        x = np.random.default_rng(2).normal(
+            size=(2, 16, 16, 3)).astype(np.float32)
+        np.testing.assert_array_equal(
+            srv.submit(x),
+            np.asarray(jax.jit(model.forward)(ref, jnp.asarray(x))))
+
+    def test_swap_scenario_without_store_raises(self, vgg_cell):
+        model, _, params = vgg_cell
+        srv = serve.CNNServer(model, _copy(params), n_slots=2)
+        with pytest.raises(ValueError, match="no ScenarioStore"):
+            srv.swap_scenario("x")
+
+    def test_reregister_invalidates_cell_and_store(self):
+        """Satellite 1: override-registering an id must drop BOTH the
+        resident cell and its scenario store — the next compile_entry
+        reflects the new config, and stale branches can't implant."""
+        serve.register(serve.ModelEntry(
+            "vgg8-rereg-test",
+            config=lambda: cnn.CNNConfig(name="vgg8", input_size=16)),
+            override=True)
+        m1, _ = serve.compile_entry("vgg8-rereg-test")
+        store1 = serve.scenario_store("vgg8-rereg-test")
+        store1.register("s", branch=scenario.split_params(
+            m1.init(jax.random.PRNGKey(0)))[0])
+        assert m1.cfg.input_size == 16
+        serve.register(serve.ModelEntry(
+            "vgg8-rereg-test",
+            config=lambda: cnn.CNNConfig(name="vgg8", input_size=32)),
+            override=True)
+        m2, _ = serve.compile_entry("vgg8-rereg-test")
+        assert m2.cfg.input_size == 32 and m2 is not m1
+        store2 = serve.scenario_store("vgg8-rereg-test")
+        assert store2 is not store1 and "s" not in store2

@@ -84,6 +84,38 @@ class TestRegistry:
         _, plan, _ = cell
         assert plan is not None and plan.model == "gemma_2b_smoke"
 
+    def test_reregister_drops_resident_cell(self):
+        serve.register(serve.ModelEntry(
+            "rereg-test",
+            config=lambda: cnn.CNNConfig(name="vgg8", input_size=16)),
+            override=True)
+        m1, _ = serve.compile_entry("rereg-test")
+        assert m1.cfg.input_size == 16
+        serve.register(serve.ModelEntry(
+            "rereg-test",
+            config=lambda: cnn.CNNConfig(name="vgg8", input_size=32)),
+            override=True)
+        m2, _ = serve.compile_entry("rereg-test")
+        assert m2 is not m1 and m2.cfg.input_size == 32
+
+    def test_compile_racing_reregister_never_publishes_stale_cell(self):
+        """A re-register landing mid-compile must not let the in-flight
+        compile publish the OLD entry's cell (it would silently serve a
+        stale config).  The entry's config factory runs inside
+        compile_entry, which lets the race be staged deterministically:
+        the old factory re-registers the id before returning."""
+        def old_factory():
+            serve.register(serve.ModelEntry(
+                "race-test",
+                config=lambda: cnn.CNNConfig(name="vgg8", input_size=32)),
+                override=True)
+            return cnn.CNNConfig(name="vgg8", input_size=16)
+
+        serve.register(serve.ModelEntry("race-test", config=old_factory),
+                       override=True)
+        model, _ = serve.compile_entry("race-test")
+        assert model.cfg.input_size == 32    # stale 16px cell discarded
+
 
 # ---------------------------------------------------------------------------
 # slot pool
