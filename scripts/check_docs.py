@@ -1,0 +1,80 @@
+"""Docs-freshness check: every subsystem must appear in the docs.
+
+Walks ``src/repro/`` for subpackages (plus top-level modules like
+``deploy.py``) and asserts each one is mentioned by name in BOTH
+``README.md`` (the subsystem table) and ``docs/ARCHITECTURE.md`` (the
+walkthroughs).  A new package added without a docs pass fails the lint
+job; a package renamed or deleted leaves a stale mention behind, which
+this check also flags.
+
+Run from the repo root:
+
+    python scripts/check_docs.py
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOCS = ("README.md", "docs/ARCHITECTURE.md")
+
+
+def subsystems() -> list[str]:
+    """Every documented unit under src/repro: subpackages + top-level
+    modules (sans extension), e.g. ['checkpoint', ..., 'deploy']."""
+    pkg = ROOT / "src" / "repro"
+    names = []
+    for p in sorted(pkg.iterdir()):
+        if p.name.startswith(("_", ".")) or p.name == "__pycache__":
+            continue
+        if p.is_dir() and any(p.glob("*.py")):
+            # some packages are namespace packages (no __init__.py)
+            names.append(p.name)
+        elif p.suffix == ".py":
+            names.append(p.stem)
+    return names
+
+
+def mentioned(name: str, text: str) -> bool:
+    # accept "repro/serve", "repro.serve", or "repro/deploy.py" forms
+    return re.search(rf"repro[/.]{re.escape(name)}\b", text) is not None
+
+
+def main() -> int:
+    subs = subsystems()
+    if not subs:
+        print("check_docs: found no subsystems under src/repro — "
+              "is the layout intact?")
+        return 1
+    failures = []
+    for doc in DOCS:
+        path = ROOT / doc
+        if not path.exists():
+            failures.append(f"{doc}: missing")
+            continue
+        text = path.read_text(encoding="utf-8")
+        missing = [s for s in subs if not mentioned(s, text)]
+        if missing:
+            failures.append(f"{doc}: no mention of {', '.join(missing)}")
+        # stale mentions: names referenced as repro/<x> that no longer exist
+        referenced = set(re.findall(r"repro[/.](\w+)", text))
+        stale = sorted(r for r in referenced if r not in set(subs))
+        if stale:
+            failures.append(f"{doc}: stale subsystem reference(s): "
+                            f"{', '.join(stale)}")
+    if failures:
+        print("docs-freshness check FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        print(f"subsystems under src/repro: {', '.join(subs)}")
+        return 1
+    print(f"docs-freshness OK: {len(subs)} subsystems covered in "
+          f"{' and '.join(DOCS)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -149,23 +149,49 @@ class CompiledModel:
         self._lm_only("init_cache")
         return api.init_cache(self.cfg, batch, max_len, dtype)
 
+    def init_paged_cache(self, rows: int, n_blocks: int, block_size: int,
+                         max_len: int, dtype=None):
+        """A paged KV cache for this model: ``n_blocks`` shared physical
+        blocks of ``block_size`` positions plus per-row block tables
+        (logical horizon ``max_len``).  Raises for families that cannot
+        page — ssm/hybrid state and SWA rings (see
+        ``api.supports_paging``) — and when ``block_size`` does not
+        divide ``max_len`` (the gathered view must match the dense
+        cache's attention geometry exactly)."""
+        self._lm_only("init_paged_cache")
+        return api.init_paged_cache(self.cfg, rows, n_blocks, block_size,
+                                    max_len, dtype)
+
     def _check_cache(self, what: str, tokens, cache):
         """Catch cache/batch geometry mismatches at the model surface.
 
         A cache built for a different batch (or a prompt longer than the
         cache horizon) used to fail DEEP inside the model with an opaque
         XLA broadcast/scatter shape error; shapes are static, so the
-        check is free at trace time and names both geometries.
+        check is free at trace time and names both geometries.  Paged
+        caches report their LOGICAL geometry (block-table rows x
+        table_width*block_size), so the same checks cover both layouts.
         """
         n_batch, seq = tokens.shape[0], tokens.shape[1]
         cache_batch, horizon = api.cache_geometry(self.cfg, cache)
+        first = api._first_layer(cache)
+        paged = isinstance(first, dict) and "table" in first
+        kind = "block-table rows" if paged else "cache rows"
+        builder = ("init_paged_cache(rows={n}, ...)" if paged
+                   else "init_cache(batch={n}, max_len=...)").format(
+                       n=n_batch)
+        if paged and what == "prefill":
+            raise ValueError(
+                "prefill cannot run against a paged cache (physical "
+                "blocks have no per-row horizon to fill); prefill into "
+                "a dense init_cache(1, max_len) cache and adopt the row "
+                "into the paged pool (serve.pool.PagedPool.adopt)")
         if cache_batch != n_batch:
             raise ValueError(
                 f"{what}: cache was built for batch={cache_batch} but "
                 f"tokens have batch={n_batch} (tokens {tokens.shape} vs "
-                f"cache rows {cache_batch}); build the cache with "
-                f"init_cache(batch={n_batch}, max_len=...) or slice the "
-                f"batch to match")
+                f"{kind} {cache_batch}); build the cache with "
+                f"{builder} or slice the batch to match")
         if what == "decode_step" and seq != 1:
             raise ValueError(
                 f"decode_step consumes ONE token per sequence, got "

@@ -60,6 +60,49 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
     return _mod(cfg).init_cache(cfg, batch, max_len, dtype)
 
 
+def supports_paging(cfg: ArchConfig) -> bool:
+    """Whether the family can serve decode through a paged KV cache.
+
+    Paging indirects KV rows through block tables, which requires every
+    sequence-mixing layer to keep an attention cache with one uniform
+    full-attention horizon: ssm state is O(1) (nothing to page), hybrid
+    mixes ssm state with per-layer SWA windows, and SWA rings smaller
+    than ``max_len`` cannot share one block table.
+    """
+    return (_mod(cfg) is transformer and cfg.sliding_window == 0)
+
+
+def supports_chunked_prefill(cfg: ArchConfig) -> bool:
+    """Whether prefill may be split into chunks across an existing cache.
+
+    Chunked prefill replays the prompt through ``prefill`` with the
+    partially-filled cache and explicit positions; the attention layers
+    then attend over the cached prefix.  That works for every family
+    whose sequence mixing is attention-with-KV-cache (the transformer
+    module).  SSM layers carry recurrent + conv state that ``prefill``
+    rebuilds from position 0 each call, so ssm/hybrid prompts must
+    prefill whole.
+    """
+    return _mod(cfg) is transformer
+
+
+def init_paged_cache(cfg: ArchConfig, rows: int, n_blocks: int,
+                     block_size: int, max_len: int, dtype=None):
+    """Paged KV cache (see ``transformer.init_paged_cache``).
+
+    Raises for families that cannot page (:func:`supports_paging`).
+    """
+    import jax.numpy as jnp
+    if not supports_paging(cfg):
+        raise ValueError(
+            f"{cfg.name!r} (family {cfg.family!r}, sliding_window="
+            f"{cfg.sliding_window}) cannot serve through a paged KV "
+            f"cache; use init_cache + a dense SlotPool")
+    dtype = dtype or jnp.bfloat16
+    return _mod(cfg).init_paged_cache(cfg, rows, n_blocks, block_size,
+                                      max_len, dtype)
+
+
 def cache_geometry(cfg: ArchConfig, cache) -> tuple[int, int | None]:
     """(batch, horizon) a serve cache was built for.
 
@@ -69,9 +112,19 @@ def cache_geometry(cfg: ArchConfig, cache) -> tuple[int, int | None]:
     sequence axis across layers (full-attention layers hold ``max_len``;
     SWA layers only their window); ``None`` for attention-free (O(1)
     state) families, whose horizon is unbounded.
+
+    Paged caches (leaves carrying a ``table`` entry, see
+    :func:`init_paged_cache`) report their LOGICAL geometry: batch is
+    the block-table row count and the horizon is
+    ``table_width * block_size`` — what the gathered attention view
+    holds, not the physical block count.
     """
     import jax
     axis = 1 if cfg.scan_layers else 0
+    first = _first_layer(cache)
+    if isinstance(first, dict) and "table" in first:
+        table, k = first["table"], first["k"]          # [(L,) B, NB]
+        return table.shape[axis], table.shape[-1] * k.shape[axis + 1]
     leaves = jax.tree.leaves(cache)
     if not leaves:
         raise ValueError("empty cache tree")
@@ -83,3 +136,13 @@ def cache_geometry(cfg: ArchConfig, cache) -> tuple[int, int | None]:
     kv = [leaf.shape[1 + axis] for leaf in leaves
           if leaf.ndim == 4 + axis]
     return batch, max(kv)
+
+
+def _first_layer(cache):
+    """The first per-layer cache dict (the stacked dict under scan)."""
+    if not isinstance(cache, dict):
+        return None
+    layers = cache.get("layers")
+    if isinstance(layers, (list, tuple)):
+        return layers[0] if layers else None
+    return layers

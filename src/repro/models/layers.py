@@ -175,6 +175,23 @@ def _chunked_causal_attention(q, k, v, chunk: int, window: int = 0,
     return jnp.moveaxis(out, 1, 2)     # [B, Sq, H, Dh]
 
 
+def _gather_paged(leaf, table):
+    """Materialise the logical [B, S, KV, Dh] view of a paged cache leaf.
+
+    leaf: [P, bs, KV, Dh] physical blocks; table: [B, NB] block ids.
+    The gathered view is identical (bit for bit, at every valid
+    position) to the dense row the same request would hold in a
+    :class:`~repro.serve.pool.SlotPool`, so attention math downstream is
+    unchanged — paging moves bytes, never bits.  Positions beyond a
+    row's length read whatever the un-granted blocks hold; they are
+    masked by the validity count exactly like stale dense rows.
+    """
+    b, nb = table.shape
+    bs = leaf.shape[1]
+    view = leaf[table]                       # [B, NB, bs, KV, Dh]
+    return view.reshape(b, nb * bs, *leaf.shape[2:])
+
+
 def _decode_attention(q, k_cache, v_cache, valid_count):
     """Single-position attention against a (possibly ring-buffer) cache.
 
@@ -212,9 +229,15 @@ def apply_attention(params, x, cfg: ArchConfig, layer_idx: int,
     k = rebranch.apply_linear(params["k"], x, spec).reshape(b, s, kv, dh)
     v = rebranch.apply_linear(params["v"], x, spec).reshape(b, s, kv, dh)
 
+    paged = cache is not None and "table" in cache
     if positions is None:
         if decode and cache is not None:
             positions = cache["length"][:, None]              # [B, 1]
+        elif cache is not None:
+            # prefill CONTINUATION: tokens extend the cache at its
+            # current per-row length (fresh cache -> offset 0, the plain
+            # prefill path, bit for bit)
+            positions = cache["length"][:, None] + jnp.arange(s)[None]
         else:
             positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
     q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope)
@@ -223,40 +246,92 @@ def apply_attention(params, x, cfg: ArchConfig, layer_idx: int,
     if decode:
         assert cache is not None and s == 1
         length = cache["length"]                               # [B]
-        s_max = cache["k"].shape[1]
-        # Per-ROW ring slot: under continuous batching the rows of one
-        # cache hold different sequences at different lengths, so each
-        # row writes its own slot (a shared ``length[0]`` slot corrupts
-        # every row whose length differs from row 0's — the new KV lands
-        # inside an already-valid slot and the true slot stays stale).
-        slot = length % s_max             # [B] ring buffer for SWA layers
         rows = jnp.arange(k.shape[0])
-        k_cache = cache["k"].at[rows, slot].set(
-            k[:, 0].astype(cache["k"].dtype))
-        v_cache = cache["v"].at[rows, slot].set(
-            v[:, 0].astype(cache["v"].dtype))
-        valid = jnp.minimum(length + 1, s_max)
-        out = _decode_attention(q, k_cache, v_cache, valid)
-        new_cache = {"k": k_cache, "v": v_cache, "length": length + 1}
-    else:
-        out = _chunked_causal_attention(q, k, v, cfg.attn_chunk, window)
-        if cache is not None:        # prefill: write the cache
+        if paged:
+            # Paged KV: rows own BLOCKS, not whole horizon rows.  The
+            # block table indirects each row's logical ring slot to a
+            # physical (block, offset); the scatter writes one entry and
+            # the gather materialises the logical view attention reads.
+            # Free rows' table entries all point at the pool's trash
+            # block, so their (masked, never-read) decode writes land
+            # outside every live request's blocks.
+            table = cache["table"]                     # [B, NB]
+            bs = cache["k"].shape[1]
+            s_max = table.shape[1] * bs
+            slot = length % s_max
+            pb = table[rows, slot // bs]               # [B] physical block
+            off = slot % bs
+            k_cache = cache["k"].at[pb, off].set(
+                k[:, 0].astype(cache["k"].dtype))
+            v_cache = cache["v"].at[pb, off].set(
+                v[:, 0].astype(cache["v"].dtype))
+            k_view = _gather_paged(k_cache, table)
+            v_view = _gather_paged(v_cache, table)
+        else:
             s_max = cache["k"].shape[1]
-            if s >= s_max:
-                # SWA ring: keep the window tail, laid out so that token t
-                # sits at slot t % s_max (decode continues the ring).
-                k_w = jnp.roll(k[:, -s_max:], s % s_max, axis=1)
-                v_w = jnp.roll(v[:, -s_max:], s % s_max, axis=1)
-            else:
-                k_w, v_w = k, v
+            # Per-ROW ring slot: under continuous batching the rows of
+            # one cache hold different sequences at different lengths,
+            # so each row writes its own slot (a shared ``length[0]``
+            # slot corrupts every row whose length differs from row 0's
+            # — the new KV lands inside an already-valid slot and the
+            # true slot stays stale).
+            slot = length % s_max         # [B] ring buffer for SWA layers
+            k_cache = cache["k"].at[rows, slot].set(
+                k[:, 0].astype(cache["k"].dtype))
+            v_cache = cache["v"].at[rows, slot].set(
+                v[:, 0].astype(cache["v"].dtype))
+            k_view, v_view = k_cache, v_cache
+        valid = jnp.minimum(length + 1, s_max)
+        out = _decode_attention(q, k_view, v_view, valid)
+        new_cache = {**cache, "k": k_cache, "v": v_cache,
+                     "length": length + 1}
+    else:
+        if paged:
+            raise ValueError(
+                "prefill cannot run against a paged cache (physical "
+                "blocks have no per-row horizon to fill); prefill into "
+                "a dense batch=1 cache and adopt the row into the "
+                "paged pool (serve.pool.PagedPool.adopt)")
+        if cache is not None and s < cache["k"].shape[1]:
+            # Prefill against a cache: attend over the UPDATED cache view
+            # (cached prefix ++ this chunk at its offset), so a prompt
+            # split into chunks across scheduler ticks sees exactly the
+            # keys a solo whole-prompt prefill would.  For a fresh cache
+            # (offset 0) this is bit-identical to attending over the
+            # chunk alone: positions beyond the chunk hold zeros and are
+            # causally masked, and masked entries contribute exact zeros
+            # to the online softmax.  Offset is length[0]: continuation
+            # assumes uniform row lengths (admission prefills are B=1).
+            offset = cache["length"][0]
+            k_att = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"].astype(k.dtype), k, offset, axis=1)
+            v_att = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"].astype(v.dtype), v, offset, axis=1)
+            out = _chunked_causal_attention(
+                q, k_att, v_att, cfg.attn_chunk, window, kv_offset=offset)
             k_cache = jax.lax.dynamic_update_slice_in_dim(
-                cache["k"], k_w.astype(cache["k"].dtype), 0, axis=1)
+                cache["k"], k.astype(cache["k"].dtype), offset, axis=1)
             v_cache = jax.lax.dynamic_update_slice_in_dim(
-                cache["v"], v_w.astype(cache["v"].dtype), 0, axis=1)
+                cache["v"], v.astype(cache["v"].dtype), offset, axis=1)
             new_cache = {"k": k_cache, "v": v_cache,
                          "length": cache["length"] + s}
         else:
-            new_cache = None
+            out = _chunked_causal_attention(q, k, v, cfg.attn_chunk, window)
+            if cache is not None:    # prompt >= horizon: SWA ring fill
+                s_max = cache["k"].shape[1]
+                # keep the window tail, laid out so that token t sits at
+                # slot t % s_max (decode continues the ring); chunked
+                # continuation never reaches here (total <= horizon).
+                k_w = jnp.roll(k[:, -s_max:], s % s_max, axis=1)
+                v_w = jnp.roll(v[:, -s_max:], s % s_max, axis=1)
+                k_cache = jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], k_w.astype(cache["k"].dtype), 0, axis=1)
+                v_cache = jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], v_w.astype(cache["v"].dtype), 0, axis=1)
+                new_cache = {"k": k_cache, "v": v_cache,
+                             "length": cache["length"] + s}
+            else:
+                new_cache = None
 
     out = out.astype(x.dtype).reshape(b, s, h * dh)
     out = rebranch.apply_linear(params["o"], out, spec,
@@ -278,6 +353,43 @@ def init_attention_cache(cfg: ArchConfig, batch: int, max_len: int,
         "k": jnp.zeros((batch, s, cfg.num_kv_heads, cfg.head_dim), dtype),
         "v": jnp.zeros((batch, s, cfg.num_kv_heads, cfg.head_dim), dtype),
         "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def init_paged_attention_cache(cfg: ArchConfig, rows: int, n_blocks: int,
+                               block_size: int, max_len: int,
+                               dtype=jnp.bfloat16):
+    """One layer of a PAGED KV cache: physical blocks + a block table.
+
+    ``k``/``v`` hold ``n_blocks`` physical blocks of ``block_size``
+    positions each, shared by every row; ``table`` maps (row, logical
+    block) -> physical block id and is owned by the pool (the model only
+    reads it).  The logical horizon per row is
+    ``table.shape[1] * block_size == max_len`` — ``block_size`` must
+    divide ``max_len`` so the gathered view has exactly the dense
+    cache's shape (same softmax geometry = same bits).  Table entries
+    are initialised to the LAST block, which the pool reserves as the
+    trash block for free rows' masked decode writes.
+    """
+    if max_len % block_size:
+        raise ValueError(
+            f"block_size {block_size} does not divide max_len {max_len}; "
+            f"the gathered paged view must have exactly the dense cache "
+            f"shape (same attention geometry = same bits)")
+    if not cfg.uses_full_attention(layer_idx=0) or cfg.sliding_window:
+        raise ValueError(
+            f"paged KV requires a uniform full-attention horizon; "
+            f"{cfg.name!r} has sliding_window={cfg.sliding_window} "
+            f"(ring caches smaller than max_len cannot share one block "
+            f"table) — serve this config over a dense SlotPool")
+    nb = max_len // block_size
+    return {
+        "k": jnp.zeros((n_blocks, block_size, cfg.num_kv_heads,
+                        cfg.head_dim), dtype),
+        "v": jnp.zeros((n_blocks, block_size, cfg.num_kv_heads,
+                        cfg.head_dim), dtype),
+        "length": jnp.zeros((rows,), jnp.int32),
+        "table": jnp.full((rows, nb), n_blocks - 1, jnp.int32),
     }
 
 

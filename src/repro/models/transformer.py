@@ -183,6 +183,29 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int,
     }
 
 
+def init_paged_cache(cfg: ArchConfig, rows: int, n_blocks: int,
+                     block_size: int, max_len: int, dtype=jnp.bfloat16):
+    """Paged KV cache: shared physical blocks + per-row block tables.
+
+    Same tree shape as :func:`init_cache` (one dict per layer, stacked
+    under ``scan_layers``) but each layer carries ``n_blocks`` physical
+    [block_size, KV, Dh] blocks plus a [rows, max_len/block_size] block
+    table instead of dense [rows, max_len] KV rows.  Block tables are
+    owned by :class:`repro.serve.pool.PagedPool`.
+    """
+    if cfg.scan_layers:
+        one = layers.init_paged_attention_cache(
+            cfg, rows, n_blocks, block_size, max_len, dtype)
+        return {"layers": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.num_layers, *a.shape)),
+            one)}
+    return {
+        "layers": [layers.init_paged_attention_cache(
+            cfg, rows, n_blocks, block_size, max_len, dtype)
+            for _ in range(cfg.num_layers)],
+    }
+
+
 def prefill(params, batch, cfg: ArchConfig, cache):
     x = _embed_inputs(params, batch, cfg)
     x = shard(x, "batch", "seq_sp", "embed")

@@ -96,6 +96,8 @@ class ScenarioStore:
         self._cache.pop(name, None)            # stale device copy, if any
 
     def names(self) -> list[str]:
+        """Every registered scenario name, sorted (the set a bad
+        ``get`` reports)."""
         return sorted(self._sources)
 
     def cached(self) -> list[str]:

@@ -9,14 +9,18 @@ can feed it.  This package owns requests on top of
     tune) entries, compiled lazily into ONE resident
     :class:`~repro.deploy.CompiledModel` per id (the exo
     ``model_base_shards`` shape: ids are data, deployment is a lookup).
-  * :mod:`repro.serve.pool`      — slot-based KV-cache pool built on
-    ``CompiledModel.init_cache``, sized from the
+  * :mod:`repro.serve.pool`      — KV-cache pools sized from the
     :class:`~repro.plan.PlacementPlan`'s SRAM residency stats (weights
-    already resident in SRAM shrink the activation/KV budget).
+    already resident in SRAM shrink the activation/KV budget): the
+    dense per-request ``SlotPool`` and the ``PagedPool``, which carves
+    the same byte budget into fixed-size blocks shared through
+    per-request block tables (short requests stop paying full-horizon
+    bytes).
   * :mod:`repro.serve.scheduler` — admission queue + continuous-batching
-    scheduler: solo prefills join the batch at decode-step boundaries,
-    finished requests retire without draining the batch, and every
-    request's output is bit-identical to a solo prefill+decode run.
+    scheduler: solo prefills (whole-prompt or chunked, interleaved with
+    decode steps) join the batch at decode-step boundaries, finished
+    requests retire without draining the batch, and every request's
+    output is bit-identical to a solo prefill+decode run.
   * :mod:`repro.serve.server`    — the async front door shared by LM
     decode serving and ``cnn.CNNConfig`` forward-only serving:
     ``serve.load(model_id)`` returns a server with ``submit``.
@@ -30,7 +34,8 @@ boundaries — zero trunk recompile, zero ROM traffic, in-flight
 requests finish on the scenario they were admitted under.
 """
 
-from repro.serve.pool import SlotPool, suggest_slots      # noqa: F401
+from repro.serve.pool import (PagedPool, SlotPool,        # noqa: F401
+                              suggest_paged, suggest_slots)
 from repro.serve.registry import (ModelEntry, compile_entry,  # noqa: F401
                                   evict, has_scenarios, register,
                                   registered_ids, resolve,

@@ -56,6 +56,10 @@ _LOCK = threading.Lock()
 
 
 def register(entry: ModelEntry, *, override: bool = False) -> ModelEntry:
+    """Publish ``entry`` under its model id.  Raises ValueError on a
+    duplicate id unless ``override=True``; overriding also drops the
+    id's resident cell and scenario store (branches validated against
+    the old cell's geometry must never implant onto the new one)."""
     with _LOCK:
         if entry.model_id in _REGISTRY and not override:
             raise ValueError(
@@ -82,10 +86,14 @@ def evict(model_id: str) -> None:
 
 
 def registered_ids() -> list[str]:
+    """Every registered model id, sorted (the set a bad id reports)."""
     return sorted(_REGISTRY)
 
 
 def resolve(model_id: str) -> ModelEntry:
+    """The entry for ``model_id``.  Unknown ids raise KeyError naming
+    the registered set — a typo fails at the front door, not by
+    deploying a default config."""
     try:
         return _REGISTRY[model_id]
     except KeyError:

@@ -2,19 +2,26 @@
 
 The scheduler owns requests.  Life of a request:
 
-  submit -> admission queue (FIFO) -> [slot free?] solo prefill
-  (batch=1, bit-identical to the standalone path) -> KV row adopted
-  into the pool -> joins the batched ``decode_step`` at the next step
-  boundary -> retires when done (max_new_tokens or EOS) -> slot freed,
-  the rest of the batch keeps decoding.
+  submit -> admission queue (FIFO) -> [pool.try_admit: a row, and —
+  paged — blocks for the whole request] solo prefill (batch=1,
+  bit-identical to the standalone path; prompts longer than
+  ``prefill_chunk`` run one chunk per tick, interleaved with decode) ->
+  KV adopted into the pool (dense row copy or paged block scatter) ->
+  joins the batched ``decode_step`` at the next step boundary ->
+  retires when done (max_new_tokens or EOS) -> capacity freed, the
+  rest of the batch keeps decoding.
 
 Invariants (tested in tests/test_serve.py):
   * occupancy never exceeds the pool size;
   * admission is FIFO and work-conserving — a request waits only while
-    every slot is held by an unfinished request (no starvation);
+    the pool cannot guarantee it (rows, or paged block reservations)
+    and admits as soon as it can (no starvation);
+  * chunked prefill never stalls the batch: in-flight decodes advance
+    on every tick a prefill chunk runs;
   * each request's tokens are bit-identical to a solo
     ``prefill`` + ``decode_step`` run of the same prompt, because the
-    per-row attention cache makes batched decode row-independent.
+    per-row attention cache (dense rows, or paged blocks gathered
+    through the block table) makes batched decode row-independent.
 
 Decoding is greedy (argmax) — deterministic, which is what makes the
 bit-parity invariant testable end to end.
@@ -41,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models import api
 from repro.scenario import swap_params
 
 
@@ -78,14 +86,41 @@ class Request:
 
 
 class ContinuousBatcher:
-    """Admission queue + decode loop over one model and one slot pool."""
+    """Admission queue + decode loop over one model and one KV pool.
 
-    def __init__(self, model, params, pool, *, scenario: str | None = None):
+    Works over either pool layout (dense :class:`~repro.serve.pool.
+    SlotPool` or paged :class:`~repro.serve.pool.PagedPool`) through the
+    shared ``try_admit`` / ``adopt`` / ``prepare_step`` / ``release``
+    surface.
+
+    ``prefill_chunk`` controls chunked prefill admission: a prompt
+    longer than the chunk is prefilled one chunk per scheduler tick,
+    interleaved with the batched decode steps, so admitting a long
+    prompt never stalls in-flight decodes for its whole prefill.  The
+    chunks run against the same solo (batch=1, dense) cache at their
+    absolute positions, so the adopted row is bit-identical to a
+    whole-prompt solo prefill (regression-tested).  ``None`` -> auto
+    (32 for families that support it, see
+    ``api.supports_chunked_prefill``); ``0`` -> whole-prompt admission.
+    """
+
+    def __init__(self, model, params, pool, *, scenario: str | None = None,
+                 prefill_chunk: int | None = None):
         self.model = model
         self.params = params
         self.pool = pool
         self.scenario = scenario            # live branch label
         self.swap_count = 0                 # swaps applied so far
+        if prefill_chunk is None:
+            prefill_chunk = 32 if api.supports_chunked_prefill(model.cfg) \
+                else 0
+        elif prefill_chunk and not api.supports_chunked_prefill(model.cfg):
+            raise ValueError(
+                f"prefill_chunk={prefill_chunk} but {model.cfg.name!r} "
+                f"(family {model.cfg.family!r}) cannot chunk prefill — "
+                f"ssm/hybrid recurrent state is rebuilt from position 0 "
+                f"each prefill call; pass prefill_chunk=0")
+        self.prefill_chunk = int(prefill_chunk)
         self._prefill = jax.jit(model.prefill)
         # donate the cache: the pool always replaces it with the returned
         # tree, so decode updates the KV rows in place instead of copying
@@ -93,6 +128,8 @@ class ContinuousBatcher:
         self._decode = jax.jit(model.decode_step, donate_argnums=(2,))
         self._queue: collections.deque = collections.deque()
         self._active: dict[int, Request] = {}       # slot -> request
+        # in-flight chunked prefill: (req, row, solo_cache, pos) or None
+        self._prefilling: tuple | None = None
         # the token column fed to decode_step: one row per slot; free
         # rows carry 0 (their output is masked by never being read)
         self._tok = np.zeros((pool.n_slots, 1), np.int32)
@@ -119,6 +156,12 @@ class ContinuousBatcher:
     def submit(self, prompt, max_new_tokens: int,
                eos_id: int | None = None,
                scenario: str | None = None) -> Request:
+        """Queue one request; returns its live :class:`Request` handle.
+
+        Raises at the front door — never mid-decode — for requests that
+        could never run: empty prompts, ``max_new_tokens < 1``, totals
+        beyond the pool's horizon, and scenario labels that do not
+        match the queue tail (swap first; ``LMServer.submit`` does)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size == 0:
             raise ValueError("empty prompt")
@@ -157,8 +200,16 @@ class ContinuousBatcher:
         return len(self._active)
 
     @property
+    def prefilling(self) -> bool:
+        """Whether a chunked prefill is in flight (its request is
+        neither queued nor active: it holds a pool row but has not
+        joined the decode batch)."""
+        return self._prefilling is not None
+
+    @property
     def idle(self) -> bool:
-        return not self._queue and not self._active
+        return (not self._queue and not self._active
+                and self._prefilling is None)
 
     # -- the loop ----------------------------------------------------------
     def _finish(self, req: Request) -> None:
@@ -182,41 +233,84 @@ class ContinuousBatcher:
         self.scenario = sw.scenario
         self.swap_count += 1
 
+    def _activate(self, req: Request, slot: int, solo, logits) -> None:
+        """Adopt a finished solo prefill into the pool and put the
+        request into the decode batch (its first token comes from the
+        prefill logits, exactly like the standalone path)."""
+        self.pool.adopt(slot, solo)
+        first = int(jnp.argmax(logits[0, -1]))
+        req.slot = slot
+        req.admit_step = self.step_count
+        req.tokens.append(first)
+        self._tok[slot, 0] = first
+        self._active[slot] = req
+        self._maybe_retire(req)           # 1-token requests finish here
+
+    def _advance_prefill(self) -> None:
+        """Run ONE chunk of the in-flight prefill.  Each chunk extends
+        the same solo cache at its absolute offset, so the finished row
+        is bit-identical to a whole-prompt solo prefill; the final
+        chunk's logits yield the first token and the row activates."""
+        req, slot, solo, pos = self._prefilling
+        end = min(pos + self.prefill_chunk, req.prompt.size)
+        logits, solo = self._prefill(
+            self.params, {"tokens": jnp.asarray(req.prompt[None, pos:end])},
+            solo)
+        if end < req.prompt.size:
+            self._prefilling = (req, slot, solo, end)
+        else:
+            self._prefilling = None
+            self._activate(req, slot, solo, logits)
+
     def _admit(self) -> None:
-        """FIFO admission into free slots; the prefill runs solo
-        (batch=1) so its bits match the standalone path exactly, and the
-        row joins the batch at the next decode boundary.  A queued
-        _Swap barrier applies only once the in-flight set has drained
-        (admitted requests finish on their admitted scenario); requests
-        behind it wait."""
-        while self._queue and (isinstance(self._queue[0], _Swap)
-                               or self.pool.free_slots):
-            if isinstance(self._queue[0], _Swap):
-                if self._active:
-                    return        # in-flight rows finish on their branch
+        """FIFO admission against the pool's capacity.
+
+        The head request admits only when the pool can GUARANTEE it
+        (``try_admit``: a free row, and — paged — enough unreserved
+        blocks for prompt + max_new_tokens); admission stays strictly
+        FIFO, so a big request blocks the queue rather than starving.
+        Prompts longer than ``prefill_chunk`` prefill one chunk per
+        tick (at most one such prefill in flight; decode keeps running
+        between chunks).  A queued _Swap barrier applies only once
+        in-flight work has drained — active rows AND any chunked
+        prefill, which must finish under the params it started with."""
+        if self._prefilling is not None:
+            self._advance_prefill()
+            if self._prefilling is not None:
+                return            # still mid-prompt; FIFO order holds
+        while self._queue:
+            head = self._queue[0]
+            if isinstance(head, _Swap):
+                if self._active or self._prefilling is not None:
+                    return        # in-flight work finishes on its branch
                 self._apply_swap(self._queue.popleft())
                 continue
+            slot = self.pool.try_admit(head.prompt.size
+                                       + head.max_new_tokens)
+            if slot is None:
+                return            # work-conserving: wait for capacity
             req = self._queue.popleft()
-            slot = self.pool.alloc()
             solo = self.pool.solo_cache()
+            if self.prefill_chunk and req.prompt.size > self.prefill_chunk:
+                self._prefilling = (req, slot, solo, 0)
+                self._advance_prefill()       # first chunk, this tick
+                if self._prefilling is not None:
+                    return
+                continue
             logits, solo = self._prefill(
                 self.params, {"tokens": jnp.asarray(req.prompt[None])},
                 solo)
-            self.pool.adopt(slot, solo)
-            first = int(jnp.argmax(logits[0, -1]))
-            req.slot = slot
-            req.admit_step = self.step_count
-            req.tokens.append(first)
-            self._tok[slot, 0] = first
-            self._active[slot] = req
-            self._maybe_retire(req)       # 1-token requests finish here
+            self._activate(req, slot, solo, logits)
 
     def step(self) -> bool:
-        """One scheduler tick: retire / admit at the boundary, then one
-        batched decode step.  Returns False once idle."""
+        """One scheduler tick: retire / admit at the boundary (one
+        prefill chunk at most), then one batched decode step.  Returns
+        False once idle."""
         self._admit()
         if not self._active:
             return not self.idle
+        # paged pools grant each row's next block here; dense no-op
+        self.pool.prepare_step()
         logits, cache = self._decode(
             self.params, jnp.asarray(self._tok), self.pool.cache)
         self.pool.cache = cache

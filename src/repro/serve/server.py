@@ -23,14 +23,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import cnn
+from repro.models import api, cnn
 from repro.serve import registry
-from repro.serve.pool import SlotPool, suggest_slots
+from repro.serve.pool import (PagedPool, SlotPool, suggest_paged,
+                              suggest_slots)
 from repro.serve.scheduler import ContinuousBatcher
 
 
 class LMServer:
     """Continuous-batching decode serving for one resident LM cell.
+
+    The KV pool is PAGED by default for families that support it
+    (``paged=None`` -> ``api.supports_paging``): requests share one
+    block pool through per-request block tables instead of each pinning
+    a full-horizon cache row, so mixed-length traffic packs more
+    concurrent requests into the same plan-budgeted bytes.  Pass
+    ``paged=False`` for the dense :class:`~repro.serve.pool.SlotPool`,
+    or ``paged=True`` to demand paging (raises for families that cannot
+    page, e.g. SWA rings / ssm state).  ``n_blocks``/``block_size``
+    size the paged pool (defaults: dense-equivalent capacity in
+    ``max_len // 8``-position blocks); ``prefill_chunk`` is forwarded
+    to the batcher (chunked prefill admission).
 
     With a :class:`~repro.scenario.ScenarioStore` attached, one cell
     serves N scenarios: ``swap_scenario`` (or ``submit(...,
@@ -40,12 +53,35 @@ class LMServer:
     """
 
     def __init__(self, model, params, *, n_slots: int, max_len: int,
-                 dtype=jnp.float32, store=None, scenario=None):
+                 dtype=jnp.float32, store=None, scenario=None,
+                 paged: bool | None = None, n_blocks: int | None = None,
+                 block_size: int | None = None,
+                 prefill_chunk: int | None = None):
         self.model = model
         self.store = store
-        self.pool = SlotPool(model, n_slots, max_len, dtype=dtype)
+        if paged is None:
+            paged = api.supports_paging(model.cfg)
+        elif paged and not api.supports_paging(model.cfg):
+            raise ValueError(
+                f"paged=True but {model.cfg.name!r} (family "
+                f"{model.cfg.family!r}, sliding_window="
+                f"{model.cfg.sliding_window}) cannot page its KV cache; "
+                f"pass paged=False for a dense SlotPool")
+        if paged:
+            if block_size is None:
+                block_size = min(64, max(8, max_len // 8))
+                while max_len % block_size:
+                    block_size -= 1
+            if n_blocks is None:
+                # dense-equivalent byte budget: n_slots full horizons
+                n_blocks = n_slots * (max_len // block_size)
+            self.pool = PagedPool(model, n_slots, n_blocks, block_size,
+                                  max_len, dtype=dtype)
+        else:
+            self.pool = SlotPool(model, n_slots, max_len, dtype=dtype)
         self.batcher = ContinuousBatcher(model, params, self.pool,
-                                         scenario=scenario)
+                                         scenario=scenario,
+                                         prefill_chunk=prefill_chunk)
 
     @property
     def params(self):
@@ -158,13 +194,20 @@ class CNNServer:
 
 def load(model_id: str, *, params=None, key=None, n_slots=None,
          max_len: int = 128, dtype=jnp.float32,
-         sram_capacity_bytes: int = 64 << 20, scenario: str | None = None):
+         sram_capacity_bytes: int = 64 << 20, scenario: str | None = None,
+         paged: bool | None = None, n_blocks: int | None = None,
+         block_size: int | None = None, prefill_chunk: int | None = None):
     """One front door for LM decode and CNN forward serving.
 
     Resolves ``model_id`` through the registry (the cell is compiled at
     most once per process), initialises params unless given, and sizes
     the KV pool from the entry's placement plan when ``n_slots`` is not
-    forced.
+    forced: dense pools via :func:`~repro.serve.pool.suggest_slots`,
+    paged pools via :func:`~repro.serve.pool.suggest_paged` (same byte
+    budget, roughly 2x the rows — short requests only pin the blocks
+    they fill).  ``paged``/``n_blocks``/``block_size``/``prefill_chunk``
+    are forwarded to :class:`LMServer` (ignored for CNN configs, which
+    have no KV state).
 
     scenario: start the server on a registered scenario's branch (see
     ``registry.scenario_store`` / ``repro.scenario``): the branch is
@@ -185,8 +228,21 @@ def load(model_id: str, *, params=None, key=None, n_slots=None,
     if isinstance(model.cfg, cnn.CNNConfig):
         return CNNServer(model, params, n_slots=n_slots or 8,
                          store=store, scenario=scenario)
+    if paged is None:
+        paged = api.supports_paging(model.cfg)
     if n_slots is None:
-        n_slots = suggest_slots(model, plan, max_len, dtype=dtype,
-                                sram_capacity_bytes=sram_capacity_bytes)
+        if paged:
+            n_slots, nb, bs = suggest_paged(
+                model, plan, max_len, dtype=dtype,
+                sram_capacity_bytes=sram_capacity_bytes,
+                block_size=block_size)
+            n_blocks = n_blocks if n_blocks is not None else nb
+            block_size = bs
+        else:
+            n_slots = suggest_slots(
+                model, plan, max_len, dtype=dtype,
+                sram_capacity_bytes=sram_capacity_bytes)
     return LMServer(model, params, n_slots=n_slots, max_len=max_len,
-                    dtype=dtype, store=store, scenario=scenario)
+                    dtype=dtype, store=store, scenario=scenario,
+                    paged=paged, n_blocks=n_blocks, block_size=block_size,
+                    prefill_chunk=prefill_chunk)

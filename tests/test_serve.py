@@ -1,12 +1,15 @@
-"""Serving runtime: registry, slot pool, continuous-batching scheduler.
+"""Serving runtime: registry, KV pools, continuous-batching scheduler.
 
-The load-bearing invariants (ISSUE 7):
+The load-bearing invariants (ISSUE 7 + ISSUE 9):
   * batch occupancy never exceeds the pool size;
   * admission is FIFO and no request starves — every submitted request
     finishes within a bounded number of scheduler ticks;
   * each request's serve output is BIT-identical to a solo
     prefill+decode_step run of the same prompt (continuous batching
-    changes scheduling, never results);
+    changes scheduling, never results) — over the dense SlotPool, over
+    the paged block pool, and with prefill split into chunks;
+  * paged admission is conservative: a request admits only when its
+    whole reservation fits, so decode can never deadlock on blocks;
   * cache/batch geometry mismatches fail at the CompiledModel surface
     with a message naming both shapes, not deep inside XLA.
 """
@@ -19,8 +22,10 @@ import numpy as np
 import pytest
 
 from repro import configs, deploy, serve
+from repro.core import rebranch
 from repro.models import api, cnn
-from repro.serve.pool import SlotPool, cache_bytes_per_slot
+from repro.serve.pool import (PagedPool, SlotPool, cache_bytes_per_slot,
+                              suggest_paged)
 from repro.serve.scheduler import ContinuousBatcher
 
 MODEL_ID = "gemma-2b-smoke"
@@ -372,6 +377,264 @@ class TestCacheGeometry:
         logits, _ = model.decode_step(
             params, jnp.zeros((2, 1), jnp.int32), cache)
         assert logits.shape[0] == 2
+
+
+# ---------------------------------------------------------------------------
+# paged KV pool (ISSUE 9 tentpole)
+# ---------------------------------------------------------------------------
+
+class TestPagedPool:
+    BS = 8          # block size; MAX_LEN=48 -> 6 logical blocks per row
+
+    def _pool(self, model, rows=3, blocks=12):
+        return PagedPool(model, rows, blocks, self.BS, MAX_LEN)
+
+    def test_admit_reserves_conservatively(self, cell):
+        """Admission must refuse unless the WHOLE request (prompt +
+        max_new) is guaranteed blocks — over-admitting would deadlock
+        decode mid-request on an empty free list."""
+        model, _, _ = cell
+        pool = self._pool(model, rows=3, blocks=7)
+        r1 = pool.try_admit(MAX_LEN)          # reserves 6 of 7 blocks
+        assert r1 is not None
+        assert pool.try_admit(2 * self.BS) is None   # 2 > 7-6 remaining
+        assert pool.try_admit(self.BS) is not None   # exactly fits
+        pool.release(r1)
+        assert pool.try_admit(2 * self.BS) is not None
+
+    def test_rows_and_blocks_both_gate_admission(self, cell):
+        model, _, _ = cell
+        pool = self._pool(model, rows=1, blocks=12)
+        assert pool.try_admit(8) is not None
+        assert pool.try_admit(8) is None      # blocks free, rows gone
+        with pytest.raises(ValueError, match="max_len"):
+            pool.try_admit(MAX_LEN + 1)       # could never fit
+
+    def test_release_returns_blocks_and_row(self, cell):
+        model, _, _ = cell
+        pool = self._pool(model)
+        row = pool.try_admit(20)
+        pool.release(row)
+        assert pool.free_slots == 3 and pool.blocks_in_use == 0
+        assert pool.blocks_reserved == 0
+        with pytest.raises(ValueError, match="double-released"):
+            pool.release(row)
+
+    def test_geometry_errors(self, cell):
+        model, _, _ = cell
+        with pytest.raises(ValueError, match="does not divide"):
+            PagedPool(model, 2, 12, 7, MAX_LEN)       # 7 ∤ 48
+        with pytest.raises(ValueError, match="one full-horizon"):
+            PagedPool(model, 2, 3, self.BS, MAX_LEN)  # 3 < 6 blocks
+        cfg = configs.get_smoke("falcon_mamba_7b")
+        assert not api.supports_paging(cfg)
+        with pytest.raises(ValueError, match="paged"):
+            api.init_paged_cache(cfg, 2, 8, 8, 32)
+
+    def test_adopt_scatters_the_row_bitwise(self, cell):
+        """The gathered logical view of an adopted row must equal the
+        dense solo cache at every valid position — paging moves bytes,
+        never bits."""
+        from repro.models.layers import _gather_paged
+        model, _, params = cell
+        pool = self._pool(model)
+        prompt = _prompts(1, model.cfg.vocab_size)[0]
+        solo = pool.solo_cache()
+        _, solo = jax.jit(model.prefill)(
+            params, {"tokens": jnp.asarray(prompt[None])}, solo)
+        row = pool.try_admit(prompt.size + 4)
+        pool.adopt(row, solo)
+        axis = 1 if model.cfg.scan_layers else 0
+        length = int(np.asarray(
+            api._first_layer(solo)["length"]).reshape(-1)[0])
+        first = api._first_layer(pool.cache)
+        k_phys = jnp.take(first["k"], 0, axis=0) if axis else first["k"]
+        table = jnp.take(first["table"], 0, axis=0) if axis \
+            else first["table"]
+        view = _gather_paged(k_phys, table)[row]
+        solo_k = api._first_layer(solo)["k"]
+        solo_row = jnp.take(solo_k, 0, axis=0)[0] if axis \
+            else solo_k[0]
+        np.testing.assert_array_equal(np.asarray(view[:length]),
+                                      np.asarray(solo_row[:length]))
+
+    def test_suggest_paged_matches_dense_budget(self, cell):
+        model, plan, _ = cell
+        rows, blocks, bs = suggest_paged(model, plan, MAX_LEN,
+                                         sram_capacity_bytes=1 << 30)
+        assert MAX_LEN % bs == 0
+        assert blocks * bs >= MAX_LEN          # at least one full request
+        assert 1 <= rows <= 64
+
+
+class TestPagedScheduler:
+    def _batcher(self, cell, rows=4, blocks=18, bs=8, chunk=None):
+        model, _, params = cell
+        pool = PagedPool(model, rows, blocks, bs, MAX_LEN)
+        return pool, ContinuousBatcher(model, params, pool,
+                                       prefill_chunk=chunk)
+
+    def test_bit_identical_to_solo_over_paged_pool(self, cell):
+        """The headline invariant survives paging: mixed prompt
+        lengths, staggered joins, mid-batch retirement through block
+        tables return exactly the solo path's tokens."""
+        model, _, params = cell
+        pool, b = self._batcher(cell)
+        prompts = _prompts(5, model.cfg.vocab_size)
+        gens = [4, 7, 3, 6, 5]
+        reqs = [b.submit(p, g) for p, g in zip(prompts, gens)]
+        b.drain(max_steps=200)
+        for r, p, g in zip(reqs, prompts, gens):
+            assert r.tokens == _solo_decode(model, params, p, g), \
+                f"request {r.rid} (len {p.size}) diverged over paging"
+        assert pool.blocks_in_use == 0 and pool.occupancy == 0
+
+    def test_blocks_grow_on_demand(self, cell):
+        """Adoption grants only the prompt's blocks; decode growth
+        grants the rest one block at a time (early EOS never
+        materialises the reservation's tail)."""
+        model, _, params = cell
+        pool, b = self._batcher(cell, rows=2, blocks=12, bs=4)
+        b.submit(_prompts(1, model.cfg.vocab_size)[0], 10)  # 6-token prompt
+        b.step()                      # admitted: 2 blocks cover prompt+1
+        start = pool.blocks_in_use
+        assert start <= 2
+        high = start
+        while not b.idle:
+            b.step()
+            high = max(high, pool.blocks_in_use)
+        assert high > start           # grew during decode
+        assert pool.blocks_in_use == 0
+
+    def test_admission_waits_for_blocks_not_just_rows(self, cell):
+        """With rows to spare but blocks exhausted, later requests must
+        queue (FIFO, work-conserving) and admit once blocks free."""
+        model, _, params = cell
+        pool, b = self._batcher(cell, rows=4, blocks=6, bs=8)
+        prompts = _prompts(3, model.cfg.vocab_size)
+        r1 = b.submit(prompts[0], MAX_LEN - prompts[0].size)  # all 6 blocks
+        r2 = b.submit(prompts[1], 4)
+        b.step()
+        assert r1.admit_step >= 0 and r2.admit_step < 0
+        assert pool.free_slots == 3          # rows were never the limit
+        b.drain(max_steps=200)
+        assert r2.done
+        assert r2.admit_step > r1.admit_step
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill admission (ISSUE 9 tentpole)
+# ---------------------------------------------------------------------------
+
+class TestChunkedPrefill:
+    def test_chunked_prefill_bit_identical(self, cell):
+        """A prompt prefilled in chunks across scheduler ticks must
+        adopt a row bit-identical to the whole-prompt solo prefill —
+        every chunk extends the same cache at absolute positions."""
+        model, _, params = cell
+        for pool in (SlotPool(model, 2, MAX_LEN),
+                     PagedPool(model, 2, 14, 8, MAX_LEN)):
+            b = ContinuousBatcher(model, params, pool, prefill_chunk=4)
+            prompts = _prompts(3, model.cfg.vocab_size, seed=3)
+            reqs = [b.submit(p, 5) for p in prompts]
+            b.drain(max_steps=200)
+            for r, p in zip(reqs, prompts):
+                assert r.tokens == _solo_decode(model, params, p, 5), \
+                    f"chunked prefill diverged ({type(pool).__name__})"
+
+    def test_prefill_chunks_interleave_with_decode(self, cell):
+        """Admitting a long prompt must not stall in-flight decodes:
+        with chunk=2, an active request keeps gaining tokens on the
+        ticks the new prompt's chunks run."""
+        model, _, params = cell
+        pool = SlotPool(model, 2, MAX_LEN)
+        b = ContinuousBatcher(model, params, pool, prefill_chunk=2)
+        prompts = _prompts(2, model.cfg.vocab_size, seed=9)
+        r1 = b.submit(prompts[0], 12)
+        ticks = 0
+        while r1.admit_step < 0:                  # r1's own chunks run
+            b.step()
+            ticks += 1
+            assert ticks < 20
+        r2 = b.submit(prompts[1], 4)              # 7 tokens: 4 chunks
+        grew = []
+        while b.prefilling or r2.admit_step < 0:
+            before = len(r1.tokens)
+            b.step()
+            grew.append(len(r1.tokens) > before)
+            ticks += 1
+            assert ticks < 100
+        assert grew and all(grew), \
+            "decode stalled during chunked prefill"
+        b.drain(max_steps=100)
+        assert r1.tokens == _solo_decode(model, params, prompts[0], 12)
+        assert r2.tokens == _solo_decode(model, params, prompts[1], 4)
+
+    def test_swap_barrier_waits_for_inflight_prefill(self, cell):
+        """A scenario swap queued behind a chunk-prefilling request
+        must not apply until that prefill (and its decode) finishes —
+        chunks after the swap would run under the wrong params."""
+        model, _, pA = cell
+        brB = jax.tree.map(
+            lambda x: x + jnp.asarray(0.02, x.dtype)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x,
+            rebranch.partition(pA)[0])
+        pool = SlotPool(model, 2, MAX_LEN)
+        b = ContinuousBatcher(model, jax.tree.map(jnp.array, pA), pool,
+                              scenario="a", prefill_chunk=2)
+        prompt = _prompts(1, model.cfg.vocab_size, seed=13)[0]
+        r1 = b.submit(prompt, 4, scenario="a")
+        b.step()                               # first chunk only
+        assert b.prefilling
+        b.swap("b", brB)
+        b.step()
+        assert b.scenario == "a"               # barrier held
+        b.drain(max_steps=100)
+        assert b.scenario == "b" and b.swap_count == 1
+        assert r1.tokens == _solo_decode(model, pA, prompt, 4)
+
+    def test_chunking_rejected_for_recurrent_families(self):
+        cfg = configs.get_smoke("falcon_mamba_7b")
+        assert not api.supports_chunked_prefill(cfg)
+        model = deploy.compile_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        pool = SlotPool(model, 1, 32)
+        b = ContinuousBatcher(model, params, pool)      # auto -> 0
+        assert b.prefill_chunk == 0
+        with pytest.raises(ValueError, match="cannot chunk"):
+            ContinuousBatcher(model, params, pool, prefill_chunk=8)
+
+
+# ---------------------------------------------------------------------------
+# paged cache geometry at the CompiledModel surface
+# ---------------------------------------------------------------------------
+
+class TestPagedGeometry:
+    def test_paged_cache_reports_logical_geometry(self, cell):
+        model, _, _ = cell
+        cache = model.init_paged_cache(3, 10, 8, MAX_LEN)
+        batch, horizon = api.cache_geometry(model.cfg, cache)
+        assert batch == 3 and horizon == MAX_LEN
+
+    def test_prefill_on_paged_cache_names_the_adopt_path(self, cell):
+        model, _, params = cell
+        cache = model.init_paged_cache(2, 10, 8, MAX_LEN)
+        with pytest.raises(ValueError, match="adopt"):
+            model.prefill(params,
+                          {"tokens": jnp.zeros((2, 8), jnp.int32)}, cache)
+
+    def test_decode_batch_mismatch_names_block_table_rows(self, cell):
+        model, _, params = cell
+        cache = model.init_paged_cache(2, 10, 8, MAX_LEN)
+        with pytest.raises(ValueError,
+                           match=r"block-table rows") as e:
+            model.decode_step(params, jnp.zeros((5, 1), jnp.int32), cache)
+        assert "init_paged_cache" in str(e.value)
+
+    def test_block_size_must_divide_max_len(self, cell):
+        model, _, _ = cell
+        with pytest.raises(ValueError, match="does not divide"):
+            model.init_paged_cache(2, 10, 7, MAX_LEN)
 
 
 # ---------------------------------------------------------------------------
