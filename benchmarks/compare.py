@@ -33,7 +33,19 @@ import sys
 # sections whose wall_us measures kernel execution (gate-worthy); the
 # rest are analytic tables where wall time is incidental
 GATED_SECTIONS = ("conv_kernel", "tuned_kernel", "serve_load",
-                  "scenario_swap")
+                  "scenario_swap", "spec_decode")
+
+# metric-name markers for rows whose VALUE is a dimensionless statistic
+# (acceptance rates, speedup ratios), not a wall time: gating them as
+# latencies would flag "acceptance went from 0.6 to 0.3" as a 2x
+# TIME regression (or, worse, bless a real slowdown that halved a
+# ratio).  They ride in BENCH_*.json for the record but never gate.
+_RATIO_MARKERS = ("acceptance", "ratio", "rate")
+
+
+def is_ratio_metric(name: str) -> bool:
+    """Whether a metric row carries a ratio/rate, not a wall time."""
+    return any(m in name for m in _RATIO_MARKERS)
 
 
 def latest_baseline(root: str) -> str | None:
@@ -57,7 +69,8 @@ def compare(current: dict, baseline: dict, *, max_ratio: float,
     """Regression messages for every gated metric exceeding the ratio."""
     problems = []
     for key, base in baseline.items():
-        if key[0] not in GATED_SECTIONS or base["wall_us"] < min_us:
+        if key[0] not in GATED_SECTIONS or base["wall_us"] < min_us \
+                or is_ratio_metric(key[1]):
             continue
         cur = current.get(key)
         if cur is None:
@@ -82,7 +95,8 @@ def ratchet(current: dict, baseline: dict, *, min_ratio: float,
     """
     wins = []
     for key, base in baseline.items():
-        if key[0] not in GATED_SECTIONS or base["wall_us"] < min_us:
+        if key[0] not in GATED_SECTIONS or base["wall_us"] < min_us \
+                or is_ratio_metric(key[1]):
             continue
         cur = current.get(key)
         if cur is None or cur["wall_us"] <= 0:
@@ -127,7 +141,7 @@ def main(argv=None) -> int:
                        min_us=args.min_us)
     n_gated = sum(1 for k, r in baseline.items()
                   if k[0] in GATED_SECTIONS and r["wall_us"] >= args.min_us
-                  and k in current)
+                  and not is_ratio_metric(k[1]) and k in current)
     print(f"compared {n_gated} kernel metrics against "
           f"{os.path.basename(baseline_path)}")
     for p in problems:

@@ -20,10 +20,10 @@ def _sections(fast: bool) -> list:
     from benchmarks import (table1_macro, fig12_area_map,
                             fig14_system_energy, conv_kernel, placement,
                             roofline, scenario_swap, serve_load,
-                            tuned_kernel)
+                            spec_decode, tuned_kernel)
     sections = [table1_macro, fig12_area_map, fig14_system_energy,
                 placement, conv_kernel, tuned_kernel, serve_load,
-                scenario_swap]
+                scenario_swap, spec_decode]
     if not fast:
         from benchmarks import fig10_generalization, fig11_du_sweep
         sections[1:1] = [fig10_generalization, fig11_du_sweep]

@@ -19,6 +19,10 @@
 10. Paged KV: mixed prompt lengths through the paged block pool —
    the same plan-budgeted bytes admit more concurrent requests when
    short prompts stop paying full-horizon rows.
+11. Speculative decode: the ReBranch branch IS the draft model —
+   branch-only drafting (trunk skipped), one batched verify step
+   through the full cell, rejected tails rolled back in the pool;
+   accepted tokens bit-identical to plain greedy decode.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -281,3 +285,33 @@ print(f"\npaged KV over one block pool: same bytes, "
 print("paged tokens bit-identical to dense pool:",
       paged_toks == dense_toks,
       "| mixed-length race: python -m benchmarks.serve_load --fast")
+
+# -- 11. speculative decode: the branch drafts, the trunk verifies ------------
+# The ReBranch branch is a free draft model: api.draft_config flips
+# trunk_skip=True on every ReBranch site, so the draft forward runs only
+# the SRAM-resident branch — (x@C)@(core@U) — over the SAME params tree
+# (control flow, not weights).  Each round the batcher drafts spec_k
+# tokens through the branch-only cell, then verifies the whole block in
+# ONE decode-width-k dispatch through the full trunk+branch cell; the
+# longest matching prefix (plus the verify argmax at the first mismatch)
+# is accepted, and the pool rolls back the rejected tail — lengths
+# truncate, paged blocks return to the free list.  Greedy output is
+# bit-identical to non-speculative decode, whatever the drafter does.
+def decode_all(spec_k):
+    s = serve.LMServer(model10, p10, n_slots=3, max_len=48, paged=True,
+                      block_size=8, n_blocks=18, spec_k=spec_k)
+    reqs = [s.submit(p, 6) for p in load10[:3]]
+    while not s.batcher.idle:
+        s.step()
+    assert s.pool.blocks_in_use == 0 and s.pool.blocks_reserved == 0
+    return [list(r.tokens) for r in reqs], s.batcher
+
+plain_toks, _ = decode_all(spec_k=0)
+spec_toks, b11 = decode_all(spec_k=3)
+print(f"\nspeculative decode (spec_k=3, branch drafts): "
+      f"{b11.spec_rounds} verify rounds for "
+      f"{sum(len(t) for t in spec_toks)} tokens, "
+      f"acceptance {b11.acceptance_rate:.2f}, no leaked blocks")
+print("spec tokens bit-identical to plain greedy decode:",
+      spec_toks == plain_toks,
+      "| speed race: python -m benchmarks.spec_decode --fast")

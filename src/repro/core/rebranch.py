@@ -45,6 +45,12 @@ class ReBranchSpec:
         default_factory=lambda: cim_lib.CiMConfig(mode="ideal"))
     param_dtype: Any = jnp.float32   # branch/scale dtype
     branch_enabled: bool = True      # trunk-only (frozen, no adapter) if False
+    # Speculative-draft mode: skip the ROM trunk matmul entirely and run
+    # only the SRAM-resident branch (y = (x@C)@(core@U) + b).  The output
+    # approximates the full layer at ~1/compression of the FLOPs — the
+    # draft half of draft/verify speculative decoding (serve spec mode).
+    # Never used for training or verified serving output.
+    trunk_skip: bool = False
 
     @property
     def compression(self) -> int:
@@ -282,6 +288,21 @@ def apply_linear(params, x, spec: ReBranchSpec, t1_axes=None,
         return y if b is None else y + b.astype(x.dtype)
 
     rom, sram = params["rom"], params["sram"]
+    if spec.trunk_skip:
+        # Draft path (speculative decode): the ROM trunk never runs —
+        # only the SRAM-resident branch contributes, at ~1/compression
+        # of the layer's FLOPs.  No engine resolution either: the draft
+        # is pure XLA on the branch tensors.  Branchless ROM sites
+        # contribute zero (their whole signal lives in the trunk).
+        if spec.branch_enabled and "core" in sram:
+            c = rom["C"].astype(x.dtype)
+            u = rom["U"].astype(x.dtype)
+            core = sram["core"].astype(x.dtype)
+            y = (x @ c) @ (core @ u)
+        else:
+            y = jnp.zeros((*x.shape[:-1], rom["w_q"].shape[-1]), x.dtype)
+        b = sram.get("b")
+        return y if b is None else y + b.astype(x.dtype)
     from repro import engine as engine_lib   # deferred: avoids import cycle
     eng = engine_lib.resolve(spec)           # strict + capability-gated
     if (spec.branch_enabled and "core" in sram

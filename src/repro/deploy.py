@@ -77,6 +77,7 @@ class CompiledModel:
         self.mesh = mesh
         self.tune = tune
         self._is_cnn = isinstance(cfg, cnn.CNNConfig)
+        self._draft_cfg = None          # lazy: see draft_cfg property
         if self._is_cnn:
             self._cnn_init, self._cnn_apply = cnn.MODEL_REGISTRY[cfg.name]
 
@@ -145,6 +146,48 @@ class CompiledModel:
         with self._scope():
             return api.decode_step(params, tokens, self.cfg, cache)
 
+    # -- speculative decode surface (draft = branch-only, verify = full) --
+    @property
+    def draft_cfg(self):
+        """The branch-only draft config (``api.draft_config``), built
+        lazily and cached: same frozen-dataclass hygiene as ``cfg``, so
+        it is safe as a jit static.  Shares this cell's params tree —
+        ``trunk_skip`` is control flow, not weights."""
+        if self._draft_cfg is None:
+            self._lm_only("draft_cfg")
+            self._draft_cfg = api.draft_config(self.cfg)
+        return self._draft_cfg
+
+    def verify_step(self, params, tokens, cache):
+        """Speculative verify: one batched pass over a [B, k] token
+        block through the FULL trunk+branch cell (k plain decode steps'
+        worth of tokens in one dispatch).  Raises for families that
+        cannot speculate (``api.supports_speculation``) and on cache /
+        block geometry mismatches."""
+        self._lm_only("verify_step")
+        self._check_cache("verify_step", tokens, cache)
+        with self._scope():
+            return api.verify_step(params, tokens, self.cfg, cache)
+
+    def draft_prefill(self, params, batch, cache):
+        """``prefill`` through the branch-only draft cell (ROM trunks
+        skipped).  Same params, same cache geometry — only the compute
+        differs, so the draft KV state tracks the draft model exactly."""
+        self._lm_only("draft_prefill")
+        tokens = batch.get("tokens", batch.get("embeds"))
+        if tokens is not None:
+            self._check_cache("prefill", tokens, cache)
+        with self._scope():
+            return api.prefill(params, batch, self.draft_cfg, cache)
+
+    def draft_decode_step(self, params, tokens, cache):
+        """``decode_step`` through the branch-only draft cell — the
+        token-proposal hot loop of speculative decode."""
+        self._lm_only("draft_decode_step")
+        self._check_cache("decode_step", tokens, cache)
+        with self._scope():
+            return api.decode_step(params, tokens, self.draft_cfg, cache)
+
     def init_cache(self, batch: int, max_len: int, dtype=None):
         self._lm_only("init_cache")
         return api.init_cache(self.cfg, batch, max_len, dtype)
@@ -196,7 +239,13 @@ class CompiledModel:
             raise ValueError(
                 f"decode_step consumes ONE token per sequence, got "
                 f"tokens {tokens.shape} (seq={seq}); use prefill() for "
-                f"multi-token inputs")
+                f"multi-token inputs (or verify_step() for a "
+                f"speculative k-token block)")
+        if what == "verify_step" and horizon is not None and seq > horizon:
+            raise ValueError(
+                f"verify_step: speculative block width {seq} exceeds "
+                f"the cache horizon {horizon} (every block entry needs "
+                f"a cache position); shrink spec_k or grow max_len")
         if (what == "prefill" and horizon is not None
                 and self.cfg.sliding_window == 0 and seq > horizon):
             raise ValueError(

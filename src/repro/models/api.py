@@ -72,6 +72,62 @@ def supports_paging(cfg: ArchConfig) -> bool:
     return (_mod(cfg) is transformer and cfg.sliding_window == 0)
 
 
+def supports_speculation(cfg: ArchConfig) -> bool:
+    """Whether the family can serve speculative (draft/verify) decode.
+
+    Verify writes k KV entries per row and must be able to UNDO the
+    rejected tail by truncating the row's length: that requires every
+    sequence-mixing layer to keep a full-horizon attention cache.  SWA
+    rings can wrap within a k-block (the overwritten entry is
+    unrecoverable) and ssm/hybrid recurrent state cannot rewind at all.
+    The predicate is currently the same as :func:`supports_paging`, for
+    the same structural reason (uniform full-attention horizon).
+    """
+    return (_mod(cfg) is transformer and cfg.sliding_window == 0)
+
+
+def verify_step(params, tokens, cfg: ArchConfig, cache):
+    """Speculative verify: k-token block decode (see
+    ``transformer.verify_step``).  Raises for families that cannot
+    speculate (:func:`supports_speculation`)."""
+    if not supports_speculation(cfg):
+        raise ValueError(
+            f"{cfg.name!r} (family {cfg.family!r}, sliding_window="
+            f"{cfg.sliding_window}) cannot run speculative verify: "
+            f"rolling back rejected drafts needs a full-horizon "
+            f"attention cache (ssm/hybrid recurrent state cannot "
+            f"rewind; SWA rings overwrite entries a rollback would "
+            f"need)")
+    return _mod(cfg).verify_step(params, tokens, cfg, cache)
+
+
+def draft_config(cfg: ArchConfig) -> ArchConfig:
+    """The branch-only DRAFT variant of ``cfg`` for speculative decode.
+
+    Every ReBranch-enabled site gets ``trunk_skip=True``: its ROM trunk
+    matmul is skipped and only the SRAM branch runs (~1/compression of
+    the FLOPs, see ``core.rebranch``).  SRAM-resident sites
+    (``enabled=False`` under the PlacementPlan's residency map) are
+    plain trainable linears and run in full — they are the cheap part by
+    placement.  The draft model shares the verify model's params tree
+    verbatim (``trunk_skip`` is control flow, not weights), so a draft
+    forward needs no extra memory and scenario hot-swaps apply to both
+    at once.
+    """
+    import dataclasses
+
+    def skip(spec):
+        if not spec.enabled or spec.trunk_skip:
+            return spec
+        return dataclasses.replace(spec, trunk_skip=True)
+
+    return dataclasses.replace(
+        cfg, rebranch=skip(cfg.rebranch),
+        rebranch_overrides=tuple(
+            (site, skip(spec))
+            for site, spec in getattr(cfg, "rebranch_overrides", ())))
+
+
 def supports_chunked_prefill(cfg: ArchConfig) -> bool:
     """Whether prefill may be split into chunks across an existing cache.
 

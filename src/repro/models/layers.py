@@ -192,6 +192,27 @@ def _gather_paged(leaf, table):
     return view.reshape(b, nb * bs, *leaf.shape[2:])
 
 
+def _verify_attention(q, k_cache, v_cache, length, s_max):
+    """Speculative-verify attention: S queries against one cache view.
+
+    q: [B, S, H, Dh]; the cache already holds this block's KV writes at
+    positions ``length .. length+S-1``.  Query j may see positions
+    ``< length+1+j`` — its own entry and everything before it — and the
+    drafted FUTURE entries are masked out.  Implemented as S calls to
+    :func:`_decode_attention` (one per query position) inside one trace,
+    so each query's softmax runs over exactly the shapes the plain
+    decode path uses: accepted speculative tokens are bit-identical to
+    sequential decode by construction, not by accident of einsum
+    scheduling.
+    """
+    outs = [
+        _decode_attention(q[:, j:j + 1], k_cache, v_cache,
+                          jnp.minimum(length + 1 + j, s_max))
+        for j in range(q.shape[1])
+    ]
+    return jnp.concatenate(outs, axis=1)
+
+
 def _decode_attention(q, k_cache, v_cache, valid_count):
     """Single-position attention against a (possibly ring-buffer) cache.
 
@@ -232,7 +253,10 @@ def apply_attention(params, x, cfg: ArchConfig, layer_idx: int,
     paged = cache is not None and "table" in cache
     if positions is None:
         if decode and cache is not None:
-            positions = cache["length"][:, None]              # [B, 1]
+            # [B, S]: each row's tokens extend its own length.  S is 1
+            # for plain decode (the arange term is an exact integer +0)
+            # and the block width for speculative verify.
+            positions = cache["length"][:, None] + jnp.arange(s)[None]
         elif cache is not None:
             # prefill CONTINUATION: tokens extend the cache at its
             # current per-row length (fresh cache -> offset 0, the plain
@@ -244,9 +268,18 @@ def apply_attention(params, x, cfg: ArchConfig, layer_idx: int,
     k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope)
 
     if decode:
-        assert cache is not None and s == 1
+        # s == 1: plain decode, one token per row.  s > 1: speculative
+        # VERIFY — a k-token draft block per row, written entry by entry
+        # (same scatter per position as k plain decode steps) and
+        # attended with per-query validity, so accepted tokens are
+        # bit-identical to sequential decode.  Verify requires a
+        # full-horizon cache (no SWA ring: a wrap would overwrite
+        # entries a rejected draft must roll back) — gated upstream by
+        # ``api.supports_speculation``.
+        assert cache is not None
         length = cache["length"]                               # [B]
         rows = jnp.arange(k.shape[0])
+        k_cache, v_cache = cache["k"], cache["v"]
         if paged:
             # Paged KV: rows own BLOCKS, not whole horizon rows.  The
             # block table indirects each row's logical ring slot to a
@@ -258,13 +291,14 @@ def apply_attention(params, x, cfg: ArchConfig, layer_idx: int,
             table = cache["table"]                     # [B, NB]
             bs = cache["k"].shape[1]
             s_max = table.shape[1] * bs
-            slot = length % s_max
-            pb = table[rows, slot // bs]               # [B] physical block
-            off = slot % bs
-            k_cache = cache["k"].at[pb, off].set(
-                k[:, 0].astype(cache["k"].dtype))
-            v_cache = cache["v"].at[pb, off].set(
-                v[:, 0].astype(cache["v"].dtype))
+            for j in range(s):
+                slot = (length + j) % s_max
+                pb = table[rows, slot // bs]           # [B] physical block
+                off = slot % bs
+                k_cache = k_cache.at[pb, off].set(
+                    k[:, j].astype(k_cache.dtype))
+                v_cache = v_cache.at[pb, off].set(
+                    v[:, j].astype(v_cache.dtype))
             k_view = _gather_paged(k_cache, table)
             v_view = _gather_paged(v_cache, table)
         else:
@@ -275,16 +309,20 @@ def apply_attention(params, x, cfg: ArchConfig, layer_idx: int,
             # slot corrupts every row whose length differs from row 0's
             # — the new KV lands inside an already-valid slot and the
             # true slot stays stale).
-            slot = length % s_max         # [B] ring buffer for SWA layers
-            k_cache = cache["k"].at[rows, slot].set(
-                k[:, 0].astype(cache["k"].dtype))
-            v_cache = cache["v"].at[rows, slot].set(
-                v[:, 0].astype(cache["v"].dtype))
+            for j in range(s):
+                slot = (length + j) % s_max   # [B] ring for SWA layers
+                k_cache = k_cache.at[rows, slot].set(
+                    k[:, j].astype(k_cache.dtype))
+                v_cache = v_cache.at[rows, slot].set(
+                    v[:, j].astype(v_cache.dtype))
             k_view, v_view = k_cache, v_cache
-        valid = jnp.minimum(length + 1, s_max)
-        out = _decode_attention(q, k_view, v_view, valid)
+        if s == 1:
+            valid = jnp.minimum(length + 1, s_max)
+            out = _decode_attention(q, k_view, v_view, valid)
+        else:
+            out = _verify_attention(q, k_view, v_view, length, s_max)
         new_cache = {**cache, "k": k_cache, "v": v_cache,
-                     "length": length + 1}
+                     "length": length + s}
     else:
         if paged:
             raise ValueError(

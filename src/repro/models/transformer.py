@@ -249,3 +249,21 @@ def decode_step(params, tokens, cfg: ArchConfig, cache):
         new_layer_caches.append(lc)
     logits = _readout(params, x, cfg)
     return logits, {"layers": new_layer_caches}
+
+
+def verify_step(params, tokens, cfg: ArchConfig, cache):
+    """Speculative VERIFY: a k-token block per sequence in one pass.
+
+    tokens: [B, k] — per row, the last accepted token followed by the
+    first k-1 drafted tokens.  Returns logits [B, k, V]: position i's
+    argmax is the TRUE next token after input i (the decode path writes
+    each token's KV before attending, with per-query validity masks), so
+    the caller accepts the longest drafted prefix that matches and takes
+    the first mismatch's correction for free — bit-identical to k plain
+    ``decode_step`` calls on the accepted prefix.  The cache comes back
+    advanced by k on every row; the serving pool rolls rejected tail
+    entries back (``rollback``).  The model body IS ``decode_step`` —
+    every layer is seq-width generic; only the deploy-surface geometry
+    check distinguishes the two.
+    """
+    return decode_step(params, tokens, cfg, cache)

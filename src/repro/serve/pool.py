@@ -47,6 +47,20 @@ def _batch_axis(cfg) -> int:
     return 1 if getattr(cfg, "scan_layers", False) else 0
 
 
+def _set_lengths(cache, new_lens: dict[int, int], scan: bool):
+    """Scatter per-row ``length`` values into every layer of a serve
+    cache (shared by both pools' speculative ``rollback``)."""
+    rows = jnp.asarray(sorted(new_lens), jnp.int32)
+    vals = jnp.asarray([new_lens[r] for r in sorted(new_lens)], jnp.int32)
+    layers = cache["layers"]
+    if scan:       # stacked leaves: [L, B] lengths, broadcast over L
+        layers = {**layers, "length": layers["length"].at[:, rows]
+                  .set(vals[None])}
+        return {"layers": layers}
+    return {"layers": [{**ld, "length": ld["length"].at[rows].set(vals)}
+                       for ld in layers]}
+
+
 class SlotPool:
     """N cache rows + a free list; adoption and release are O(1)."""
 
@@ -103,6 +117,22 @@ class SlotPool:
     def prepare_step(self) -> None:
         """Pre-decode hook: dense rows never need new capacity (no-op;
         the paged pool grants blocks here)."""
+
+    def prepare_tokens(self, n: int) -> None:
+        """Pre-verify hook for an ``n``-token speculative block: dense
+        rows span the full horizon, nothing to grant (no-op; the paged
+        pool grants the covering blocks here)."""
+
+    def rollback(self, new_lens: dict[int, int]) -> None:
+        """Truncate rows to ``{slot: new_length}`` after a speculative
+        verify rejected part of a draft block.  Dense rows only need
+        their device lengths reset — the rejected KV entries beyond the
+        new length become stale garbage that the validity mask hides
+        until the next write overwrites them (exactly like a retired
+        row's leftovers)."""
+        if not new_lens:
+            return
+        self.cache = _set_lengths(self.cache, new_lens, self._axis == 1)
 
     # -- cache row transfer ---------------------------------------------
     def adopt(self, slot: int, solo_cache) -> None:
@@ -278,11 +308,67 @@ class PagedPool:
         The scheduler calls this immediately before each batched
         ``decode_step`` — after it returns, no in-flight write can miss
         its block."""
+        self.prepare_tokens(1)
+
+    def prepare_tokens(self, n: int) -> None:
+        """Multi-token ``prepare_step``: grant every active row the
+        blocks covering its next ``n`` write positions (a speculative
+        verify writes a whole k-token block per row) and advance the
+        host-side lengths by ``n``.  Grants stay within the admission
+        reservation — the scheduler clamps k so a row never speculates
+        past its admitted ``prompt + max_new_tokens`` need — and
+        ``rollback`` returns whatever a rejected draft leaves unused."""
+        if n < 1:
+            raise ValueError(f"need at least one token, got {n}")
         for row in self._len:
             pos = self._len[row]
-            if pos // self.block_size >= len(self._blocks[row]):
+            while (pos + n - 1) // self.block_size >= \
+                    len(self._blocks[row]):
                 self._grant(row)
-            self._len[row] = pos + 1
+            self._len[row] = pos + n
+        self.sync()
+
+    def rollback(self, new_lens: dict[int, int]) -> None:
+        """Truncate rows to ``{row: new_length}`` after a speculative
+        verify rejected part of a draft block.
+
+        Three things must round-trip, or speculation would leak:
+          * device lengths reset, so the validity mask hides the
+            rejected entries (they are overwritten before ever being
+            readable again — the next block's writes start at
+            ``new_length``);
+          * tail blocks past ``ceil(new_length/block_size)`` return to
+            the free list AND re-credit the row's reservation
+            (``_owed``), keeping the admission invariant — granted +
+            owed always covers the row's remaining worst case, and
+            ``free - reserved`` seen by ``try_admit`` is exactly what
+            it was before the speculative grant;
+          * the table tail points back at the trash block, so the
+            row's future masked writes can't land in blocks that may
+            be re-granted to someone else.
+        """
+        if not new_lens:
+            return
+        for row, new_len in new_lens.items():
+            if row not in self._blocks:
+                raise ValueError(
+                    f"rollback of row {row}, which holds no blocks "
+                    f"(released, or never admitted)")
+            if not (0 <= new_len <= self._len.get(row, 0)):
+                raise ValueError(
+                    f"rollback of row {row} to length {new_len}, "
+                    f"outside [0, {self._len.get(row, 0)}] — rollback "
+                    f"only ever truncates")
+            keep = -(-new_len // self.block_size)
+            tail = self._blocks[row][keep:]
+            if tail:
+                del self._blocks[row][keep:]
+                self._free_blocks.extend(reversed(tail))
+                self._owed[row] = self._owed.get(row, 0) + len(tail)
+                self._table[row, keep:] = self._trash
+                self._dirty = True
+            self._len[row] = new_len
+        self.cache = _set_lengths(self.cache, new_lens, self._scan)
         self.sync()
 
     def release(self, row: int) -> None:

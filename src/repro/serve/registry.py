@@ -50,9 +50,11 @@ class ModelEntry:
 
 
 _REGISTRY: dict[str, ModelEntry] = {}
-_COMPILED: dict[str, tuple] = {}          # id -> (CompiledModel, plan)
+_COMPILED: dict[str, tuple] = {}          # id -> (CompiledModel, plan),
+                                          # LRU-ordered: oldest first
 _STORES: dict[str, Any] = {}              # id -> ScenarioStore
 _LOCK = threading.Lock()
+_MAX_RESIDENT: int | None = None          # None -> unbounded residency
 
 
 def register(entry: ModelEntry, *, override: bool = False) -> ModelEntry:
@@ -72,17 +74,70 @@ def register(entry: ModelEntry, *, override: bool = False) -> ModelEntry:
         # additionally re-checks entry identity before publishing a
         # cell, so a compile racing this register can't resurrect the
         # stale entry's cell either.
-        _COMPILED.pop(entry.model_id, None)
-        _STORES.pop(entry.model_id, None)
+        _drop(entry.model_id)
     return entry
 
 
-def evict(model_id: str) -> None:
+def _drop(model_id: str) -> bool:
+    """Drop one id's resident cell and scenario store (caller holds
+    ``_LOCK``).  The single eviction path: explicit :func:`evict`, entry
+    re-registration, and the LRU cap all funnel through here.  Returns
+    whether a resident cell was actually dropped."""
+    dropped = _COMPILED.pop(model_id, None) is not None
+    _STORES.pop(model_id, None)
+    return dropped
+
+
+def evict(model_id: str) -> bool:
     """Drop the resident cell (and scenario store) for ``model_id``;
-    the next ``compile_entry`` recompiles from the registered entry."""
+    the next ``compile_entry`` recompiles from the registered entry.
+    Returns whether a cell was resident (False -> nothing to drop)."""
     with _LOCK:
-        _COMPILED.pop(model_id, None)
-        _STORES.pop(model_id, None)
+        return _drop(model_id)
+
+
+def set_max_resident(n: int | None) -> None:
+    """Cap how many compiled cells stay resident at once (LRU).
+
+    Real YOLoC silicon holds ONE ROM trunk; this process-level registry
+    can deploy many smoke cells, and each resident cell pins its jit
+    executables and any scenario store.  With a cap, compiling (or
+    touching, via ``compile_entry``) an id past the cap evicts the
+    least-recently-used resident — through the same :func:`evict` path
+    a caller would use — and the evicted id transparently recompiles on
+    its next load.  ``None`` removes the cap (the default)."""
+    global _MAX_RESIDENT
+    if n is not None and n < 1:
+        raise ValueError(f"max_resident must be >= 1 or None, got {n}")
+    with _LOCK:
+        _MAX_RESIDENT = n
+        _evict_over_cap()
+
+
+def max_resident() -> int | None:
+    """The current residency cap (``None`` -> unbounded)."""
+    return _MAX_RESIDENT
+
+
+def resident_ids() -> list[str]:
+    """Ids with a compiled resident cell, least-recently-used first
+    (the head is the next LRU eviction victim)."""
+    with _LOCK:
+        return list(_COMPILED)
+
+
+def _touch(model_id: str) -> None:
+    """Move an id to the most-recently-used end (caller holds _LOCK)."""
+    if model_id in _COMPILED:
+        _COMPILED[model_id] = _COMPILED.pop(model_id)
+
+
+def _evict_over_cap() -> None:
+    """Evict LRU residents until under the cap (caller holds _LOCK)."""
+    if _MAX_RESIDENT is None:
+        return
+    while len(_COMPILED) > _MAX_RESIDENT:
+        _drop(next(iter(_COMPILED)))       # dict order: oldest first
 
 
 def registered_ids() -> list[str]:
@@ -112,6 +167,7 @@ def compile_entry(model_id: str):
     while True:
         with _LOCK:
             if model_id in _COMPILED:
+                _touch(model_id)           # LRU: a hit is a use
                 return _COMPILED[model_id]
         entry = resolve(model_id)
         cfg = entry.config()
@@ -133,7 +189,10 @@ def compile_entry(model_id: str):
                             # is stale — never publish it (it would
                             # silently serve the OLD entry's config)
             # lost race against an identical compile: keep the first
-            return _COMPILED.setdefault(model_id, (model, plan))
+            cell = _COMPILED.setdefault(model_id, (model, plan))
+            _touch(model_id)               # newest use -> MRU end
+            _evict_over_cap()
+            return cell
 
 
 def has_scenarios(model_id: str) -> bool:

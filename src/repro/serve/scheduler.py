@@ -26,6 +26,25 @@ Invariants (tested in tests/test_serve.py):
 Decoding is greedy (argmax) — deterministic, which is what makes the
 bit-parity invariant testable end to end.
 
+Speculative decode (``spec_k > 0``): the YOLoC-native draft/verify
+split.  Each round, a cheap DRAFT model — the SRAM ReBranch branch with
+the ROM trunk skipped (``CompiledModel.draft_decode_step``), or an
+injected ``draft_source`` — proposes up to k tokens per row; then ONE
+batched ``verify_step`` over the [N, k] block runs the full trunk+branch
+cell and greedy accept-longest-prefix keeps the drafted prefix that
+matches the verify argmaxes, plus the first mismatch's correction for
+free.  Accepted output is bit-identical to non-speculative greedy decode
+regardless of draft quality: position i's verify logits are computed
+from the same accepted tokens plain decode would have fed, with drafted
+future KV entries masked per query (see ``layers._verify_attention``).
+Bookkeeping is kept symmetric by NOT claiming the bonus token a
+fully-accepted block's last logits would give: both the verify cache and
+the draft cache then always hold KV through the sequence's second-last
+token, so every round starts with one uniform width-1 draft feed.
+Rejected tails roll back through ``pool.rollback`` — lengths truncate
+and (paged) tail blocks return to the free list with the row's
+reservation re-credited, so speculation never leaks blocks.
+
 Scenario hot-swap (repro.scenario): the batcher can swap the params
 tree's SRAM branch over the resident ROM trunk mid-stream.  A swap is a
 BARRIER in the same FIFO queue requests ride: it applies at a
@@ -50,6 +69,7 @@ import numpy as np
 
 from repro.models import api
 from repro.scenario import swap_params
+from repro.serve.pool import SlotPool
 
 
 @dataclasses.dataclass
@@ -75,6 +95,9 @@ class Request:
     finish_step: int = -1                 # tick the last token landed
     submit_s: float = 0.0                 # wall clock, for latency stats
     finish_s: float = 0.0
+    drafted: int = 0                      # draft tokens verified for this row
+    matched: int = 0                      # of those, accepted (drafts only —
+                                          # mismatch corrections not counted)
 
     @property
     def done(self) -> bool:
@@ -102,15 +125,52 @@ class ContinuousBatcher:
     whole-prompt solo prefill (regression-tested).  ``None`` -> auto
     (32 for families that support it, see
     ``api.supports_chunked_prefill``); ``0`` -> whole-prompt admission.
+
+    ``spec_k`` turns on speculative decode (see the module docstring):
+    up to ``spec_k`` tokens drafted per row per round, one batched
+    ``verify_step`` per round, accepted tokens bit-identical to plain
+    greedy decode.  ``draft_source`` (optional) replaces the branch-only
+    draft model with a callable ``(active: {slot: Request},
+    last_tok: [n_slots, 1] int32, k) -> [n_slots, k] int32`` — used by
+    benchmarks to dial acceptance rates deterministically; ``None``
+    drafts through ``model.draft_decode_step`` over a dense draft KV
+    cache that shadows the pool row for row.
     """
 
     def __init__(self, model, params, pool, *, scenario: str | None = None,
-                 prefill_chunk: int | None = None):
+                 prefill_chunk: int | None = None, spec_k: int = 0,
+                 draft_source=None):
         self.model = model
         self.params = params
         self.pool = pool
         self.scenario = scenario            # live branch label
         self.swap_count = 0                 # swaps applied so far
+        if spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {spec_k}")
+        if spec_k and not api.supports_speculation(model.cfg):
+            raise ValueError(
+                f"spec_k={spec_k} but {model.cfg.name!r} (family "
+                f"{model.cfg.family!r}, sliding_window="
+                f"{model.cfg.sliding_window}) cannot speculate: "
+                f"rollback needs a full-horizon attention cache "
+                f"(api.supports_speculation); pass spec_k=0")
+        self.spec_k = int(spec_k)
+        self.draft_source = draft_source
+        self.spec_rounds = 0                # verify dispatches so far
+        self.drafted_total = 0              # draft tokens verified
+        self.matched_total = 0              # of those, accepted
+        if self.spec_k:
+            self._verify = jax.jit(model.verify_step, donate_argnums=(2,))
+            if draft_source is None:
+                # The draft model's own KV state: a dense cache with one
+                # row per pool slot, indexed by the SAME slot ids (the
+                # SlotPool here is a plain cache holder — its free list
+                # is unused; admission/release stay with self.pool).
+                self._draft_prefill = jax.jit(model.draft_prefill)
+                self._draft_decode = jax.jit(model.draft_decode_step,
+                                             donate_argnums=(2,))
+                self._draft_pool = SlotPool(model, pool.n_slots,
+                                            pool.max_len, dtype=pool.dtype)
         if prefill_chunk is None:
             prefill_chunk = 32 if api.supports_chunked_prefill(model.cfg) \
                 else 0
@@ -211,6 +271,14 @@ class ContinuousBatcher:
         return (not self._queue and not self._active
                 and self._prefilling is None)
 
+    @property
+    def acceptance_rate(self) -> float:
+        """Accepted / verified draft tokens over the batcher's lifetime
+        (mismatch corrections — free tokens the verify computes itself —
+        are not drafts and count in neither term)."""
+        return (self.matched_total / self.drafted_total
+                if self.drafted_total else 0.0)
+
     # -- the loop ----------------------------------------------------------
     def _finish(self, req: Request) -> None:
         req.finish_step = self.step_count
@@ -238,6 +306,19 @@ class ContinuousBatcher:
         request into the decode batch (its first token comes from the
         prefill logits, exactly like the standalone path)."""
         self.pool.adopt(slot, solo)
+        if self.spec_k and self.draft_source is not None:
+            pass                          # injected drafter: no draft KV
+        elif self.spec_k:
+            # Shadow the row in the draft model's cache: one whole-prompt
+            # branch-only prefill (cheap — the trunks are skipped), so
+            # the draft cache holds KV for the prompt and starts every
+            # round one token behind the sequence tail, exactly like the
+            # verify cache.  Chunking is unnecessary at draft cost.
+            d_solo = self._draft_pool.solo_cache()
+            _, d_solo = self._draft_prefill(
+                self.params, {"tokens": jnp.asarray(req.prompt[None])},
+                d_solo)
+            self._draft_pool.adopt(slot, d_solo)
         first = int(jnp.argmax(logits[0, -1]))
         req.slot = slot
         req.admit_step = self.step_count
@@ -304,11 +385,14 @@ class ContinuousBatcher:
 
     def step(self) -> bool:
         """One scheduler tick: retire / admit at the boundary (one
-        prefill chunk at most), then one batched decode step.  Returns
-        False once idle."""
+        prefill chunk at most), then one batched decode step — or, in
+        speculative mode, one draft+verify round.  Returns False once
+        idle."""
         self._admit()
         if not self._active:
             return not self.idle
+        if self.spec_k:
+            return self._spec_step()
         # paged pools grant each row's next block here; dense no-op
         self.pool.prepare_step()
         logits, cache = self._decode(
@@ -320,6 +404,73 @@ class ContinuousBatcher:
             req.tokens.append(int(nxt[slot]))
             self._tok[slot, 0] = nxt[slot]
             self._maybe_retire(req)
+        return not self.idle
+
+    def _spec_step(self) -> bool:
+        """One draft+verify round over the active batch.
+
+        k is clamped to the smallest remaining token budget across
+        active rows: every row then needs at most k more cache
+        positions, which its admission already reserved — verify writes
+        can never wrap or outrun the pool.  The round: k width-1 draft
+        feeds propose d[0..k-1]; verify runs the [N, k] block
+        [last_token, d[0..k-2]] through the full cell; row-wise, the
+        longest drafted prefix matching the verify argmaxes is accepted
+        plus the first mismatch's correction (so every round lands 1..k
+        tokens, and a k=1 round IS a plain decode step, bit for bit).
+        Rejected tails roll back — verify cache AND draft cache — to
+        the accepted length.
+        """
+        k = min(self.spec_k,
+                min(r.max_new_tokens - len(r.tokens)
+                    for r in self._active.values()))
+        n = self.pool.n_slots
+        if self.draft_source is not None:
+            drafts = np.asarray(
+                self.draft_source(dict(self._active), self._tok.copy(), k),
+                np.int32).reshape(n, k)
+        else:
+            drafts = np.zeros((n, k), np.int32)
+            tok = self._tok
+            for j in range(k):
+                d_logits, d_cache = self._draft_decode(
+                    self.params, jnp.asarray(tok), self._draft_pool.cache)
+                self._draft_pool.cache = d_cache
+                nxt = np.asarray(jnp.argmax(d_logits[:, -1, :], axis=-1),
+                                 np.int32)
+                drafts[:, j] = nxt
+                tok = nxt[:, None]
+        # one batched verify over [last_token, d0..d_{k-2}]
+        block = np.concatenate([self._tok, drafts[:, :k - 1]], axis=1)
+        self.pool.prepare_tokens(k)
+        logits, cache = self._verify(
+            self.params, jnp.asarray(block), self.pool.cache)
+        self.pool.cache = cache
+        truth = np.asarray(jnp.argmax(logits, axis=-1), np.int32)  # [N, k]
+        self.step_count += 1
+        self.spec_rounds += 1
+        roll: dict[int, int] = {}
+        for slot, req in list(self._active.items()):
+            d, c = drafts[slot], truth[slot]
+            j = int(np.argmax(d != c)) if bool((d != c).any()) else k
+            accepted = [int(t) for t in c[:min(j + 1, k)]]
+            req.drafted += k
+            req.matched += j if j < k else k
+            self.drafted_total += k
+            self.matched_total += j if j < k else k
+            old_len = req.prompt.size + len(req.tokens) - 1
+            for t in accepted:
+                req.tokens.append(t)
+                if req.eos_id is not None and t == req.eos_id:
+                    break                 # EOS mid-block: drop the rest
+            self._tok[slot, 0] = req.tokens[-1]
+            new_len = req.prompt.size + len(req.tokens) - 1
+            self._maybe_retire(req)       # retirement releases the row:
+            if slot in self._active and new_len != old_len + k:
+                roll[slot] = new_len      # survivors truncate the tail
+        self.pool.rollback(roll)
+        if self.draft_source is None:
+            self._draft_pool.rollback(roll)
         return not self.idle
 
     def drain(self, max_steps: int | None = None) -> int:

@@ -50,13 +50,22 @@ class LMServer:
     scenario=...)``) queues a branch hot-swap behind the in-flight
     requests — zero trunk recompile, zero ROM traffic, and every
     request decodes entirely under the scenario it was admitted with.
+
+    ``spec_k > 0`` turns on speculative decode (the YOLoC-native
+    draft/verify split — see ``serve.scheduler``): up to ``spec_k``
+    tokens per row drafted by the branch-only model (ROM trunks
+    skipped), then one batched full-cell ``verify_step`` per round.
+    Output stays bit-identical to ``spec_k=0`` greedy decode.
+    ``draft_source`` optionally replaces the branch drafter with a
+    callable (benchmarks use it to dial acceptance rates).
     """
 
     def __init__(self, model, params, *, n_slots: int, max_len: int,
                  dtype=jnp.float32, store=None, scenario=None,
                  paged: bool | None = None, n_blocks: int | None = None,
                  block_size: int | None = None,
-                 prefill_chunk: int | None = None):
+                 prefill_chunk: int | None = None, spec_k: int = 0,
+                 draft_source=None):
         self.model = model
         self.store = store
         if paged is None:
@@ -81,7 +90,9 @@ class LMServer:
             self.pool = SlotPool(model, n_slots, max_len, dtype=dtype)
         self.batcher = ContinuousBatcher(model, params, self.pool,
                                          scenario=scenario,
-                                         prefill_chunk=prefill_chunk)
+                                         prefill_chunk=prefill_chunk,
+                                         spec_k=spec_k,
+                                         draft_source=draft_source)
 
     @property
     def params(self):
@@ -196,7 +207,8 @@ def load(model_id: str, *, params=None, key=None, n_slots=None,
          max_len: int = 128, dtype=jnp.float32,
          sram_capacity_bytes: int = 64 << 20, scenario: str | None = None,
          paged: bool | None = None, n_blocks: int | None = None,
-         block_size: int | None = None, prefill_chunk: int | None = None):
+         block_size: int | None = None, prefill_chunk: int | None = None,
+         spec_k: int = 0, draft_source=None):
     """One front door for LM decode and CNN forward serving.
 
     Resolves ``model_id`` through the registry (the cell is compiled at
@@ -206,8 +218,8 @@ def load(model_id: str, *, params=None, key=None, n_slots=None,
     paged pools via :func:`~repro.serve.pool.suggest_paged` (same byte
     budget, roughly 2x the rows — short requests only pin the blocks
     they fill).  ``paged``/``n_blocks``/``block_size``/``prefill_chunk``
-    are forwarded to :class:`LMServer` (ignored for CNN configs, which
-    have no KV state).
+    /``spec_k``/``draft_source`` are forwarded to :class:`LMServer`
+    (ignored for CNN configs, which have no KV state and do not decode).
 
     scenario: start the server on a registered scenario's branch (see
     ``registry.scenario_store`` / ``repro.scenario``): the branch is
@@ -245,4 +257,5 @@ def load(model_id: str, *, params=None, key=None, n_slots=None,
     return LMServer(model, params, n_slots=n_slots, max_len=max_len,
                     dtype=dtype, store=store, scenario=scenario,
                     paged=paged, n_blocks=n_blocks, block_size=block_size,
-                    prefill_chunk=prefill_chunk)
+                    prefill_chunk=prefill_chunk, spec_k=spec_k,
+                    draft_source=draft_source)

@@ -6,7 +6,8 @@ winners as deterministic JSON next to ``repro/tune/table.py``):
     PYTHONPATH=src python -m repro.tune \
         [--models darknet19 resnet18 tiny_yolo] [--sizes 32] \
         [--modes ideal] [--kernels trunk_conv cim_matmul] \
-        [--repeat 3] [--no-grid] [--full-sweep] [--out PATH]
+        [--batches 1 8] [--repeat 3] [--no-grid] [--full-sweep] \
+        [--out PATH]
 
 Check (static consistency of the checked-in table against the CURRENT
 site enumeration — the CI smoke step; exits nonzero on drift):
@@ -42,6 +43,10 @@ def main(argv=None) -> int:
                     default=["trunk_conv", "cim_matmul"],
                     choices=sorted(autotune.KERNEL_DEFAULTS),
                     help="kernels to tune per site geometry")
+    ap.add_argument("--batches", nargs="+", type=int, default=[1, 8],
+                    help="serving batch sizes to enumerate (the patch "
+                         "GEMM's M axis is batch*OH*OW; 8 is the "
+                         "CNNServer micro-batch default)")
     ap.add_argument("--repeat", type=int, default=3,
                     help="timing samples per candidate (best-of-k)")
     ap.add_argument("--no-grid", action="store_true",
@@ -61,7 +66,8 @@ def main(argv=None) -> int:
 
     entries, meta = autotune.tune_table_for(
         tuple(args.models), tuple(args.sizes), tuple(args.modes),
-        tuple(args.kernels), repeat=args.repeat, fast=not args.full_sweep,
+        tuple(args.kernels), batches=tuple(args.batches),
+        repeat=args.repeat, fast=not args.full_sweep,
         grid=not args.no_grid, log=print)
     out = args.out or table._DEFAULT_PATH
     table.save_table(entries, out, meta=meta)

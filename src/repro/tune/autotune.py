@@ -64,7 +64,7 @@ class Geometry:
     m: int
     k: int
     n: int
-    # trunk_conv only: (kernel size, c_in, c_out, input hw, stride)
+    # trunk_conv only: (kernel size, c_in, c_out, input hw, stride, batch)
     conv: tuple | None = None
 
     @property
@@ -136,27 +136,33 @@ def candidates(kernel: str, m: int, k: int, n: int, *,
 # ---------------------------------------------------------------------------
 
 def conv_geometries(models: tuple[str, ...], sizes: tuple[int, ...],
-                    modes: tuple[str, ...],
-                    kernels: tuple[str, ...]) -> list[Geometry]:
+                    modes: tuple[str, ...], kernels: tuple[str, ...],
+                    batches: tuple[int, ...] = (1,)) -> list[Geometry]:
     """Deduplicated tunable geometries over the families' conv sites.
 
     Each conv site becomes a ``trunk_conv`` geometry (float activations,
     the deployment path) and/or a ``cim_matmul`` one (int8 patches, the
     ``cim_conv`` fidelity path) keyed on the implied patch GEMM.
+
+    ``batches`` enumerates serving batch sizes: the patch GEMM's M axis
+    is ``batch * OH * OW``, so a micro-batched forward (CNNServer rides
+    ``n_slots`` images per dispatch) hits DIFFERENT table keys than the
+    solo shape — geometries the tuner would otherwise never have seen.
+    The default keeps the historical solo-only enumeration.
     """
     from repro.models import cnn            # deferred: heavy import
 
     geoms: dict[str, Geometry] = {}
-    for name, size in itertools.product(models, sizes):
+    for name, size, batch in itertools.product(models, sizes, batches):
         cfg = cnn.CNNConfig(name=name, input_size=size)
         for site, kk, c_in, c_out, out_hw, stride in cnn.conv_site_shapes(cfg):
             del site
-            m, kdim = out_hw * out_hw, kk * kk * c_in
+            m, kdim = batch * out_hw * out_hw, kk * kk * c_in
             if m == 0:
                 continue        # pooled below 1px at this input size:
                                 # the kernels short-circuit empty outputs
 
-            conv = (kk, c_in, c_out, out_hw * stride, stride)
+            conv = (kk, c_in, c_out, out_hw * stride, stride, batch)
             for mode in modes:
                 if "trunk_conv" in kernels:
                     g = Geometry("trunk_conv", mode, "float32",
@@ -191,8 +197,8 @@ def _runner(geom: Geometry):
     key = jax.random.PRNGKey(0)
 
     if geom.kernel == "trunk_conv":
-        kk, c_in, c_out, hw, stride = geom.conv
-        x = jax.random.normal(key, (1, hw, hw, c_in), jnp.float32)
+        kk, c_in, c_out, hw, stride, batch = (*geom.conv, 1)[:6]
+        x = jax.random.normal(key, (batch, hw, hw, c_in), jnp.float32)
         w_q = jax.random.randint(jax.random.fold_in(key, 1),
                                  (kk, kk, c_in, c_out), -127, 128, jnp.int8)
         w_scale = jnp.full((c_out,), 0.01, jnp.float32)
@@ -295,10 +301,11 @@ def tune_geometry(geom: Geometry, *, repeat: int = 3, fast: bool = False,
 
 def tune_table_for(models: tuple[str, ...], sizes: tuple[int, ...],
                    modes: tuple[str, ...], kernels: tuple[str, ...], *,
-                   repeat: int = 3, fast: bool = False, grid: bool = True,
+                   batches: tuple[int, ...] = (1,), repeat: int = 3,
+                   fast: bool = False, grid: bool = True,
                    log=None) -> tuple[dict[str, Tiling], dict]:
     """(entries, meta) for the conv-site geometries of ``models``."""
-    geoms = conv_geometries(models, sizes, modes, kernels)
+    geoms = conv_geometries(models, sizes, modes, kernels, batches)
     entries: dict[str, Tiling] = {}
     for i, geom in enumerate(geoms):
         res = tune_geometry(geom, repeat=repeat, fast=fast, grid=grid)
@@ -313,6 +320,7 @@ def tune_table_for(models: tuple[str, ...], sizes: tuple[int, ...],
                 f"{res.n_candidates} cands, {res.n_mismatched} dropped)")
     meta = {"models": sorted(models), "sizes": sorted(sizes),
             "modes": sorted(modes), "kernels": sorted(kernels),
+            "batches": sorted(batches),
             "backend": jax.default_backend(), "fast": bool(fast),
             "grid": bool(grid), "repeat": int(repeat)}
     return entries, meta
@@ -347,7 +355,9 @@ def check_table(path: str | None = None, log=print) -> bool:
 
     geoms = conv_geometries(tuple(meta["models"]),
                             tuple(int(s) for s in meta["sizes"]),
-                            tuple(meta["modes"]), tuple(meta["kernels"]))
+                            tuple(meta["modes"]), tuple(meta["kernels"]),
+                            # older tables predate batched enumeration
+                            tuple(int(b) for b in meta.get("batches", [1])))
     expected = {g.key: g for g in geoms}
     ok = True
     for key, g in sorted(expected.items()):

@@ -15,6 +15,7 @@ The load-bearing invariants (ISSUE 7 + ISSUE 9):
 """
 
 import asyncio
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -669,3 +670,285 @@ class TestPerRowCacheRows:
             np.testing.assert_array_equal(
                 np.asarray(batched_logits[i]), np.asarray(solo_logits[0]),
                 err_msg=f"row {i} (len {prompts[i].size}) diverged")
+
+# ---------------------------------------------------------------------------
+# speculative decode (ISSUE 10 tentpole)
+# ---------------------------------------------------------------------------
+
+def _oracle_draft(model, params, prompts, gens, wrong_every=None):
+    """A ``draft_source`` proposing the known greedy continuation.
+
+    ``wrong_every=j`` corrupts every j-th generated position (j=1 means
+    every proposal is wrong); ``None`` proposes perfectly.  Returns the
+    draft fn plus the solo references for parity assertions.
+    """
+    refs = [_solo_decode(model, params, p, g)
+            for p, g in zip(prompts, gens)]
+    vocab = model.cfg.vocab_size
+
+    def draft(active, tok, k):
+        out = np.zeros((tok.shape[0], k), np.int32)
+        for slot, req in active.items():
+            ref = refs[req.rid % len(refs)]
+            pos = len(req.tokens)          # next position to generate
+            for i in range(k):
+                t = ref[pos + i]
+                if wrong_every and (pos + i) % wrong_every == 0:
+                    t = (t + 1) % vocab
+                out[slot, i] = t
+        return out
+
+    return draft, refs
+
+
+class TestSpeculativeDecode:
+    def test_branch_draft_bit_identical_both_pools(self, cell):
+        """The headline invariant: spec mode with the REAL branch-only
+        draft model (trunk_skip) returns exactly the non-speculative
+        greedy tokens — mixed prompt lengths, staggered retirement,
+        dense and paged pools."""
+        model, _, params = cell
+        gens = [4, 7, 3, 6, 5]
+        for pool in (SlotPool(model, 2, MAX_LEN),
+                     PagedPool(model, 4, 18, 8, MAX_LEN)):
+            b = ContinuousBatcher(model, params, pool, spec_k=3)
+            prompts = _prompts(5, model.cfg.vocab_size)
+            reqs = [b.submit(p, g) for p, g in zip(prompts, gens)]
+            b.drain(max_steps=500)
+            for r, p, g in zip(reqs, prompts, gens):
+                assert r.tokens == _solo_decode(model, params, p, g), \
+                    f"request {r.rid} diverged ({type(pool).__name__})"
+            assert pool.occupancy == 0
+        assert b.spec_rounds > 0 and b.drafted_total > 0
+
+    def test_partial_acceptance_parity_and_accounting(self, cell):
+        """An oracle draft that misses every 3rd position still yields
+        bit-identical output, and the drafted/matched counters add up."""
+        model, _, params = cell
+        prompts = _prompts(4, model.cfg.vocab_size, seed=5)
+        gens = [6, 8, 5, 7]
+        draft, refs = _oracle_draft(model, params, prompts, gens,
+                                    wrong_every=3)
+        pool = SlotPool(model, 2, MAX_LEN)
+        b = ContinuousBatcher(model, params, pool, spec_k=4,
+                              draft_source=draft)
+        reqs = [b.submit(p, g) for p, g in zip(prompts, gens)]
+        b.drain(max_steps=500)
+        for r, ref in zip(reqs, refs):
+            assert r.tokens == ref
+        assert 0.0 < b.acceptance_rate < 1.0
+        assert b.drafted_total == sum(r.drafted for r in reqs)
+        assert b.matched_total == sum(r.matched for r in reqs)
+        for r in reqs:
+            assert 0 <= r.matched <= r.drafted
+            # every round lands >=1 token, so at most gen rounds of <=k
+            assert r.drafted <= 4 * len(r.tokens)
+
+    def test_rejected_drafts_never_leak_blocks(self, cell):
+        """An always-wrong draft forces a full rollback every round;
+        the paged pool's block accounting must still balance to zero
+        and the output must still be exact (each round lands the one
+        corrected token)."""
+        model, _, params = cell
+        prompts = _prompts(3, model.cfg.vocab_size, seed=2)
+        gens = [5, 6, 4]
+        draft, refs = _oracle_draft(model, params, prompts, gens,
+                                    wrong_every=1)
+        pool = PagedPool(model, 3, 18, 8, MAX_LEN)
+        b = ContinuousBatcher(model, params, pool, spec_k=4,
+                              draft_source=draft)
+        reqs = [b.submit(p, g) for p, g in zip(prompts, gens)]
+        high = 0
+        while not b.idle:
+            b.step()
+            high = max(high, pool.blocks_in_use)
+            assert b.step_count < 500
+        for r, ref in zip(reqs, refs):
+            assert r.tokens == ref
+        assert b.acceptance_rate == 0.0
+        assert high > 0
+        assert pool.blocks_in_use == 0 and pool.blocks_reserved == 0
+        assert pool.occupancy == 0
+
+    def test_midstream_scenario_swap_under_spec(self, cell):
+        """A scenario swap queued while spec rounds are in flight must
+        hold until the admitted requests finish, then requests admitted
+        under the new branch must match ITS solo greedy decode — the
+        draft shadow cache swaps along with the verify path."""
+        from repro.scenario import swap_params
+        model, _, pA = cell
+        brB = jax.tree.map(
+            lambda x: x + jnp.asarray(0.02, x.dtype)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x,
+            rebranch.partition(pA)[0])
+        pB = swap_params(jax.tree.map(jnp.array, pA), brB)
+        pool = SlotPool(model, 2, MAX_LEN)
+        b = ContinuousBatcher(model, jax.tree.map(jnp.array, pA), pool,
+                              scenario="a", spec_k=2)
+        prompts = _prompts(2, model.cfg.vocab_size, seed=13)
+        r1 = b.submit(prompts[0], 6, scenario="a")
+        b.step()                                # spec round under A
+        assert r1.admit_step >= 0 and not r1.done
+        b.swap("b", brB)
+        b.step()
+        assert b.scenario == "a"                # barrier held
+        r2 = b.submit(prompts[1], 5, scenario="b")
+        b.drain(max_steps=200)
+        assert b.scenario == "b" and b.swap_count == 1
+        assert r1.tokens == _solo_decode(model, pA, prompts[0], 6)
+        assert r2.tokens == _solo_decode(model, pB, prompts[1], 5)
+
+    def test_verify_block_wider_than_horizon_raises(self, cell):
+        model, _, params = cell
+        cache = model.init_cache(2, 16, dtype=jnp.float32)
+        with pytest.raises(ValueError, match="horizon"):
+            model.verify_step(params,
+                              jnp.zeros((2, 17), jnp.int32), cache)
+
+    def test_trunk_skip_is_branch_only_math(self):
+        """apply_linear under trunk_skip == the closed-form branch
+        (x@C)@(core@U): no trunk contribution, no engine dispatch."""
+        spec = rebranch.ReBranchSpec(d_ratio=2, u_ratio=2)
+        key = jax.random.PRNGKey(3)
+        p = rebranch.init_linear(key, 16, 12, spec, use_bias=True)
+        p["sram"]["core"] = jax.random.normal(
+            jax.random.PRNGKey(4), p["sram"]["core"].shape,
+            p["sram"]["core"].dtype)
+        x = jax.random.normal(jax.random.PRNGKey(5), (3, 16))
+        skip = dataclasses.replace(spec, trunk_skip=True)
+        y = rebranch.apply_linear(p, x, skip)
+        core_u = p["sram"]["core"].astype(x.dtype) @ p["rom"]["U"].astype(
+            x.dtype)
+        want = (x @ p["rom"]["C"].astype(x.dtype)) @ core_u \
+            + p["sram"]["b"].astype(x.dtype)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+        # branchless ROM site: the draft contributes exactly zero
+        solo = rebranch.ReBranchSpec(branch_enabled=False, trunk_skip=True)
+        p2 = rebranch.init_linear(key, 16, 12,
+                                  dataclasses.replace(
+                                      solo, trunk_skip=False))
+        np.testing.assert_array_equal(
+            np.asarray(rebranch.apply_linear(p2, x, solo)),
+            np.zeros((3, 12), np.float32))
+
+    def test_draft_config_flips_every_enabled_site(self, cell):
+        model, _, _ = cell
+        cfg = model.cfg
+        dcfg = api.draft_config(cfg)
+        if cfg.rebranch.enabled:
+            assert dcfg.rebranch.trunk_skip
+        for _site, spec in dcfg.rebranch_overrides:
+            if spec.enabled:
+                assert spec.trunk_skip
+        # idempotent: a draft of a draft is the same config
+        assert api.draft_config(dcfg) == dcfg
+
+    def test_spec_rejected_for_recurrent_families(self):
+        cfg = configs.get_smoke("falcon_mamba_7b")
+        assert not api.supports_speculation(cfg)
+        model = deploy.compile_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        pool = SlotPool(model, 1, 32)
+        with pytest.raises(ValueError, match="spec_k=0"):
+            ContinuousBatcher(model, params, pool, spec_k=2)
+        with pytest.raises(ValueError, match="speculative verify"):
+            cache = model.init_cache(1, 32, dtype=jnp.float32)
+            model.verify_step(params, jnp.zeros((1, 2), jnp.int32), cache)
+
+    def test_spec_k_validation(self, cell):
+        model, _, params = cell
+        with pytest.raises(ValueError, match="spec_k"):
+            ContinuousBatcher(model, params, SlotPool(model, 1, MAX_LEN),
+                              spec_k=-1)
+
+
+# ---------------------------------------------------------------------------
+# paged-pool rollback primitive (spec decode's undo path)
+# ---------------------------------------------------------------------------
+
+class TestPoolRollback:
+    def test_prepare_tokens_grants_then_rollback_returns_tail(self, cell):
+        model, _, params = cell
+        pool = PagedPool(model, 2, 12, 8, MAX_LEN)
+        cache = pool.solo_cache()
+        prompt = _prompts(1, model.cfg.vocab_size)[0]   # 6 tokens
+        _, cache = jax.jit(model.prefill)(
+            params, {"tokens": jnp.asarray(np.asarray(prompt)[None])},
+            cache)
+        row = pool.try_admit(prompt.size + 10)
+        pool.adopt(row, cache)
+        start_len = int(prompt.size)
+        before = pool.blocks_in_use
+        reserved = pool.blocks_reserved
+        pool.prepare_tokens(4)               # room for a k=4 verify block
+        grown = pool.blocks_in_use
+        assert grown > before                # 6+4=10 spans block 2
+        pool.rollback({row: start_len + 1})  # keep 1 accepted token
+        assert pool.blocks_in_use == before  # tail block came back
+        assert pool.blocks_reserved == reserved  # reservation re-credited
+        assert pool._len[row] == start_len + 1
+        # re-granting after a rollback reuses the freed tail blocks
+        pool.prepare_tokens(4)
+        assert pool.blocks_in_use == grown
+        pool.release(row)
+        assert pool.blocks_in_use == 0 and pool.blocks_reserved == 0
+
+    def test_rollback_validation(self, cell):
+        model, _, _ = cell
+        pool = PagedPool(model, 2, 12, 8, MAX_LEN)
+        with pytest.raises(ValueError, match="holds no blocks"):
+            pool.rollback({0: 5})            # row never admitted
+        with pytest.raises(ValueError, match="at least one token"):
+            pool.prepare_tokens(0)
+        row = pool.try_admit(10)
+        pool.prepare_tokens(3)
+        with pytest.raises(ValueError, match="only ever truncates"):
+            pool.rollback({row: 99})         # growth is not a rollback
+        pool.release(row)
+
+
+# ---------------------------------------------------------------------------
+# registry LRU residency cap (ISSUE 10 satellite)
+# ---------------------------------------------------------------------------
+
+class TestRegistryLRU:
+    def _mini(self, name, size):
+        serve.register(serve.ModelEntry(
+            name, config=lambda: cnn.CNNConfig(name="vgg8",
+                                               input_size=size)),
+            override=True)
+
+    def test_cap_evicts_oldest_and_hits_refresh_recency(self):
+        for n, s in (("lru-a", 16), ("lru-b", 16), ("lru-c", 16)):
+            self._mini(n, s)
+        try:
+            serve.set_max_resident(2)
+            ma, _ = serve.compile_entry("lru-a")
+            serve.compile_entry("lru-b")
+            assert "lru-a" in serve.resident_ids()
+            serve.compile_entry("lru-a")     # hit: a becomes most-recent
+            serve.compile_entry("lru-c")     # evicts b, NOT a
+            ids = serve.resident_ids()
+            assert "lru-b" not in ids and "lru-a" in ids and "lru-c" in ids
+            assert len(ids) <= 2
+            ma2, _ = serve.compile_entry("lru-a")
+            assert ma2 is ma                 # survivor kept its cell
+        finally:
+            serve.set_max_resident(None)
+            for n in ("lru-a", "lru-b", "lru-c"):
+                serve.evict(n)
+
+    def test_evicted_id_recompiles_fresh(self):
+        self._mini("lru-d", 16)
+        m1, _ = serve.compile_entry("lru-d")
+        assert serve.evict("lru-d")
+        assert not serve.evict("lru-d")      # idempotent: already gone
+        m2, _ = serve.compile_entry("lru-d")
+        assert m2 is not m1
+        serve.evict("lru-d")
+
+    def test_cap_validation(self):
+        with pytest.raises(ValueError, match="max_resident"):
+            serve.set_max_resident(0)
+        assert serve.max_resident() is None

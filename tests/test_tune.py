@@ -94,6 +94,29 @@ class TestTable:
         # the CI smoke step (python -m repro.tune --check) as a test
         assert autotune.check_table(log=lambda *a, **k: None)
 
+    def test_batched_geometries_scale_the_m_axis(self):
+        """Serving batch sizes enumerate DISTINCT table keys: the patch
+        GEMM's M axis is batch*OH*OW, so a micro-batched CNNServer
+        dispatch must not fall back to untuned defaults."""
+        solo = autotune.conv_geometries(
+            ("tiny_yolo",), (32,), ("ideal",), ("trunk_conv",))
+        both = autotune.conv_geometries(
+            ("tiny_yolo",), (32,), ("ideal",), ("trunk_conv",),
+            batches=(1, 8))
+        solo_keys = {g.key for g in solo}
+        assert solo_keys < {g.key for g in both}       # strict superset
+        by_shape = {(g.m, g.k, g.n): g for g in both}
+        for g in solo:
+            batched = by_shape.get((8 * g.m, g.k, g.n))
+            assert batched is not None, f"no batch-8 twin for {g.key}"
+            assert batched.conv[5] == 8 and g.conv[5] == 1
+        # meta round-trip: a table generated with batches checks clean
+        # against the same enumeration (and a legacy table without the
+        # key falls back to solo-only)
+        assert autotune.conv_geometries(
+            ("tiny_yolo",), (32,), ("ideal",), ("trunk_conv",),
+            batches=(1,)) == solo
+
 
 # ---------------------------------------------------------------------------
 # legality
